@@ -1,0 +1,42 @@
+"""Shared benchmark helpers.
+
+CPU-budget policy: every benchmark runs a scaled-down version of the
+paper's experiment by default (`quick=True`) — same axes being varied, same
+comparisons, smaller models/datasets — and scales up with --full.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import make_dataset
+
+ROWS: List[Dict] = []
+
+
+def record(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append({"name": name, "us_per_call": us_per_call, "derived": derived})
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def csv_header():
+    print("name,us_per_call,derived")
+
+
+def small_mnist(size=512, hw=12):
+    return make_dataset("mnist", size=size, image_hw=hw, channels=1)
+
+
+def small_cifar(size=512, hw=12):
+    return make_dataset("cifar", size=size, image_hw=hw, channels=3)
+
+
+def timed(fn: Callable, *args, repeats: int = 1, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt

@@ -1,0 +1,60 @@
+"""Fig. 6 — synchronous vs asynchronous P2P convergence.
+
+Paper setting: MobileNetV3-Small, batch 64, SGD lr=0.001, four peers;
+synchronous P2P converges faster and more stably (async consumes stale
+gradients). We run both modes with heterogeneous peer speeds (staleness
+source) and compare validation-accuracy trajectories.
+
+Validated claim: sync reaches a higher accuracy in the same number of
+epochs and its trajectory is less erratic than async.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import LocalP2PCluster
+from repro.data import make_dataset
+from repro.optim import sgd
+
+from benchmarks.common import record, small_mnist
+
+
+def run(quick: bool = True):
+    ds = small_mnist(size=768, hw=12)
+    epochs = 6 if quick else 30
+    histories = {}
+    for mode in ("sync", "async"):
+        cl = LocalP2PCluster(
+            get_config("mobilenet-v3-small"),
+            ds,
+            num_peers=4, batch_size=16 if quick else 64,
+            batches_per_epoch=3,
+            optimizer=sgd(momentum=0.9), lr=0.02,
+            sync=(mode == "sync"),
+            peer_speeds=None if mode == "sync" else [1.0, 1.0, 4.0, 8.0],
+        )
+        hist = cl.run(epochs)
+        accs = [h.get("val_acc", np.nan) for h in hist]
+        histories[mode] = accs
+        record(
+            f"fig6/{mode}",
+            0.0,
+            "acc_curve=" + "|".join(f"{a:.3f}" for a in accs),
+        )
+    best_sync = np.nanmax(histories["sync"])
+    best_async = np.nanmax(histories["async"])
+    # stability: std of first differences
+    var_sync = np.nanstd(np.diff(histories["sync"]))
+    var_async = np.nanstd(np.diff(histories["async"]))
+    record(
+        "fig6/claim:sync_converges_better", 0.0,
+        f"best_sync={best_sync:.3f};best_async={best_async:.3f};"
+        f"jitter_sync={var_sync:.3f};jitter_async={var_async:.3f};"
+        f"holds={best_sync >= best_async}",
+    )
+    return histories
+
+
+if __name__ == "__main__":
+    run()

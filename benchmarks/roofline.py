@@ -1,0 +1,37 @@
+"""Roofline report — formats the dry-run JSON (launch/dryrun.py --json)
+into the EXPERIMENTS.md §Roofline table. Does not require 512 devices:
+reads the recorded artifacts.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import record
+
+DEFAULT_JSON = os.path.join(os.path.dirname(__file__), "..", "dryrun_singlepod.json")
+
+
+def run(quick: bool = True, path: str = DEFAULT_JSON):
+    if not os.path.exists(path):
+        record("roofline/missing", 0.0, f"run launch/dryrun.py --all --json {path}")
+        return []
+    with open(path) as f:
+        recs = json.load(f)
+    for r in recs:
+        if "skipped" in r:
+            record(f"roofline/{r['arch']}/{r['shape']}", 0.0, f"skipped:{r['skipped']}")
+            continue
+        terms = r["terms_s"]
+        record(
+            f"roofline/{r['arch']}/{r['shape']}",
+            terms[r["dominant"]] * 1e6,
+            f"compute_s={terms['compute']:.3e};memory_s={terms['memory']:.3e};"
+            f"collective_s={terms['collective']:.3e};dominant={r['dominant']};"
+            f"useful={r['useful_flops_ratio']:.2f}",
+        )
+    return recs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Benchmark runner — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig3,...]
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.record).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale settings")
+    ap.add_argument("--only", default=None, help="comma-separated module keys")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig3_serverless_speedup,
+        fig4_scaling,
+        fig5_compression,
+        fig6_sync_async,
+        roofline,
+        table1_resource_stages,
+        table2_3_cost,
+    )
+    from benchmarks.common import csv_header, record
+
+    suites = {
+        "table1": table1_resource_stages,
+        "fig3": fig3_serverless_speedup,
+        "table2_3": table2_3_cost,
+        "fig4": fig4_scaling,
+        "fig5": fig5_compression,
+        "fig6": fig6_sync_async,
+        "roofline": roofline,
+    }
+    if args.only:
+        keys = args.only.split(",")
+        suites = {k: v for k, v in suites.items() if k in keys}
+
+    csv_header()
+    failures = []
+    for name, mod in suites.items():
+        t0 = time.time()
+        try:
+            mod.run(quick=not args.full)
+            record(f"suite/{name}", (time.time() - t0) * 1e6, "status=ok")
+        except Exception as e:  # pragma: no cover
+            failures.append(name)
+            traceback.print_exc()
+            record(f"suite/{name}", (time.time() - t0) * 1e6, f"status=FAILED:{e!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Tables II & III — cost of gradient computation: serverless vs instances.
+
+Two parts:
+1. *Paper validation*: plug the paper's measured inputs (batch counts,
+   Lambda memory sizes, compute times) into cost formulas (1) and (2) and
+   check we reproduce their dollar figures, including the 5.34x headline.
+2. *Our workload*: cost the CNN gradient epoch measured by the executor on
+   this container under both backends.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import LocalP2PCluster, ServerlessExecutor
+from repro.core.cost import (
+    InstanceCost,
+    ServerlessCost,
+    paper_table2_row,
+    paper_table3_row,
+)
+from repro.data import make_dataset
+from repro.optim import sgd
+
+from benchmarks.common import record, small_mnist
+
+PAPER_TABLE2_TOTALS = {1024: 0.03567, 512: 0.03069, 128: 0.03451, 64: 0.05435}
+PAPER_TABLE3_TOTALS = {1024: 0.00665, 512: 0.00717, 128: 0.00851, 64: 0.01017}
+
+
+def run(quick: bool = True):
+    max_rel_err = 0.0
+    for batch in (1024, 512, 128, 64):
+        r2 = paper_table2_row(batch)
+        ours_s = ServerlessCost(
+            compute_time_s=r2["compute_time_s"],
+            num_batches=r2["num_batches"],
+            lambda_memory_mb=r2["lambda_memory_mb"],
+            instance="t2.small",
+        ).cost_per_peer
+        r3 = paper_table3_row(batch)
+        ours_i = InstanceCost(r3["compute_time_s"], "t2.large").cost_per_peer
+        e2 = abs(ours_s - PAPER_TABLE2_TOTALS[batch]) / PAPER_TABLE2_TOTALS[batch]
+        e3 = abs(ours_i - PAPER_TABLE3_TOTALS[batch]) / PAPER_TABLE3_TOTALS[batch]
+        max_rel_err = max(max_rel_err, e2, e3)
+        record(
+            f"table2_3/paper_batch{batch}",
+            r2["compute_time_s"] * 1e6,
+            f"serverless_usd={ours_s:.5f};instance_usd={ours_i:.5f};"
+            f"ratio={ours_s/ours_i:.2f};rel_err={max(e2,e3)*100:.1f}%",
+        )
+    ratio_1024 = (
+        ServerlessCost(41.2, 15, 4400, "t2.small").cost_per_peer
+        / InstanceCost(258.0, "t2.large").cost_per_peer
+    )
+    record(
+        "table2_3/claim:cost_ratio", 0.0,
+        f"ratio={ratio_1024:.2f};paper=5.34;max_rel_err={max_rel_err*100:.1f}%",
+    )
+
+    # our measured workload
+    ds = small_mnist(size=256)
+    for backend in ("instance", "serverless"):
+        cl = LocalP2PCluster(
+            get_config("squeezenet1.1"), ds, num_peers=2, batch_size=16,
+            batches_per_epoch=2 if quick else 8,
+            optimizer=sgd(momentum=0.9), lr=0.01,
+            executor=ServerlessExecutor(backend=backend),
+        )
+        cl.run_epoch_sync(0)
+        r = cl.peers[0].reports[0]
+        record(
+            f"table2_3/measured_{backend}",
+            r.wall_time_s * 1e6,
+            f"cost_usd={r.cost_usd:.6f};lambda_mb={r.lambda_memory_mb}",
+        )
+    return max_rel_err
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Batched serving example: greedy decode with KV caches across families.
+
+Serves three different architecture families (dense+SWA, SSM, hybrid) with
+batched requests and reports per-family tokens/s — demonstrating that
+`serve_step` covers attention caches, rolling windows and SSM states.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs import get_config, reduced
+
+
+def serve(arch: str, batch: int = 4, gen: int = 48):
+    cfg = reduced(get_config(arch), vocab_size=512)
+    params = models.init_model(jax.random.PRNGKey(0), cfg)
+    state = models.init_decode_state(cfg, batch, gen + 8)
+
+    @jax.jit
+    def step(params, state, tok):
+        logits, state = models.decode_step(params, state, tok, cfg)
+        return logits.argmax(-1)[:, None].astype(jnp.int32), state
+
+    tok = jnp.ones((batch, 1), jnp.int32)
+    tok, state = step(params, state, tok)  # compile
+    t0 = time.time()
+    outs = []
+    for _ in range(gen):
+        tok, state = step(params, state, tok)
+        outs.append(np.asarray(tok)[:, 0])
+    dt = time.time() - t0
+    seqs = np.stack(outs, 1)
+    print(f"{arch:15s} [{cfg.family:6s}] {batch} reqs x {gen} tokens: "
+          f"{batch*gen/dt:7.1f} tok/s   sample: {seqs[0][:10].tolist()}")
+
+
+def main():
+    for arch in ("gemma2-2b", "mamba2-370m", "zamba2-1.2b"):
+        serve(arch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Config registry: ``get_config(name)`` / ``--arch <id>``."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+    reduced,
+)
+
+# arch id -> module name
+_ARCH_MODULES = {
+    "mamba2-370m": "mamba2_370m",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "dbrx-132b": "dbrx_132b",
+    "internvl2-26b": "internvl2_26b",
+    "gemma2-2b": "gemma2_2b",
+    "whisper-base": "whisper_base",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "starcoder2-3b": "starcoder2_3b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    # the paper's own models
+    "vgg11": "vgg11",
+    "mobilenet-v3-small": "mobilenet_v3_small",
+    "squeezenet1.1": "squeezenet1_1",
+}
+
+ASSIGNED_ARCHS = tuple(list(_ARCH_MODULES)[:10])
+PAPER_ARCHS = tuple(list(_ARCH_MODULES)[10:])
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {', '.join(_ARCH_MODULES)}"
+        )
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {n: get_config(n) for n in _ARCH_MODULES}
+
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "TRAIN_4K",
+    "PREFILL_32K",
+    "DECODE_32K",
+    "LONG_500K",
+    "reduced",
+    "get_config",
+    "all_configs",
+    "ASSIGNED_ARCHS",
+    "PAPER_ARCHS",
+]

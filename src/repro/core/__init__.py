@@ -1,0 +1,44 @@
+"""Core: the paper's contribution — serverless P2P distributed training."""
+from repro.core.p2p import (
+    Topology,
+    build_p2p_train_step,
+    exchange_gradients,
+    init_mailbox,
+    lambda_shard,
+)
+from repro.core.compression import QSGDConfig, quantize_tree, dequantize_tree
+from repro.core.convergence import (
+    ConvergenceDetector,
+    EarlyStopping,
+    ReduceLROnPlateau,
+)
+from repro.core.cost import InstanceCost, ServerlessCost, TPUCost
+from repro.core.mailbox import HostMailbox
+from repro.core.serverless import (
+    ServerlessExecutor,
+    ServerlessPlanner,
+    StepFunctionPlan,
+)
+from repro.core.simulate import LocalP2PCluster
+
+__all__ = [
+    "Topology",
+    "build_p2p_train_step",
+    "exchange_gradients",
+    "init_mailbox",
+    "lambda_shard",
+    "QSGDConfig",
+    "quantize_tree",
+    "dequantize_tree",
+    "ConvergenceDetector",
+    "EarlyStopping",
+    "ReduceLROnPlateau",
+    "InstanceCost",
+    "ServerlessCost",
+    "TPUCost",
+    "HostMailbox",
+    "ServerlessExecutor",
+    "ServerlessPlanner",
+    "StepFunctionPlan",
+    "LocalP2PCluster",
+]

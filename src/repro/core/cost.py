@@ -1,0 +1,110 @@
+"""Cost model — reproduces the paper's Tables II/III and extends to TPU.
+
+AWS backend (paper-faithful):
+  * Lambda (ARM, the paper packages for "our custom ARM architecture"):
+    $0.0000133334 per GB-second. With this constant the paper's per-second
+    Lambda costs reproduce exactly: 4400 MB -> $0.0000573/s, 2800 MB ->
+    $0.0000362/s, 1800 MB -> $0.0000233/s, 1700 MB -> $0.0000220/s.
+  * EC2 on-demand: t2.small $0.023/h ($0.00000639/s, paper Table II),
+    t2.medium $0.0464/h, t2.large $0.0928/h ($0.00002578/s, paper Table III).
+
+  Formula (1):  cost_serverless = (lambda_cost_s * num_batches + ec2_cost_s) * T
+  Formula (2):  cost_instance  = ec2_cost_s * T
+
+TPU backend (for the roofline work): chip-seconds at an on-demand v5e rate.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+LAMBDA_USD_PER_GB_S_ARM = 0.0000133334
+LAMBDA_USD_PER_REQUEST = 0.20 / 1_000_000
+
+EC2_USD_PER_HOUR = {
+    "t2.nano": 0.0058,
+    "t2.micro": 0.0116,
+    "t2.small": 0.023,
+    "t2.medium": 0.0464,
+    "t2.large": 0.0928,
+    "t2.xlarge": 0.1856,
+}
+
+TPU_V5E_USD_PER_CHIP_HOUR = 1.20
+
+
+def ec2_cost_per_second(instance: str) -> float:
+    return EC2_USD_PER_HOUR[instance] / 3600.0
+
+
+def lambda_cost_per_second(memory_mb: int) -> float:
+    return (memory_mb / 1024.0) * LAMBDA_USD_PER_GB_S_ARM
+
+
+@dataclass(frozen=True)
+class ServerlessCost:
+    compute_time_s: float
+    num_batches: int
+    lambda_memory_mb: int
+    instance: str = "t2.small"
+    include_request_fee: bool = False
+
+    @property
+    def lambda_cost_s(self) -> float:
+        return lambda_cost_per_second(self.lambda_memory_mb)
+
+    @property
+    def cost_per_peer(self) -> float:
+        """Paper formula (1)."""
+        c = (
+            self.lambda_cost_s * self.num_batches
+            + ec2_cost_per_second(self.instance)
+        ) * self.compute_time_s
+        if self.include_request_fee:
+            c += LAMBDA_USD_PER_REQUEST * self.num_batches
+        return c
+
+
+@dataclass(frozen=True)
+class InstanceCost:
+    compute_time_s: float
+    instance: str = "t2.large"
+
+    @property
+    def cost_per_peer(self) -> float:
+        """Paper formula (2)."""
+        return ec2_cost_per_second(self.instance) * self.compute_time_s
+
+
+@dataclass(frozen=True)
+class TPUCost:
+    """Beyond-paper: the same trade-off expressed in chip-seconds."""
+
+    step_time_s: float
+    chips: int
+    usd_per_chip_hour: float = TPU_V5E_USD_PER_CHIP_HOUR
+
+    @property
+    def cost_per_step(self) -> float:
+        return self.step_time_s * self.chips * self.usd_per_chip_hour / 3600.0
+
+
+def paper_table2_row(batch_size: int) -> Dict[str, float]:
+    """The paper's measured Table II inputs, for validation tests."""
+    rows = {
+        1024: dict(num_batches=15, lambda_memory_mb=4400, compute_time_s=41.2),
+        512: dict(num_batches=30, lambda_memory_mb=2800, compute_time_s=28.1),
+        128: dict(num_batches=118, lambda_memory_mb=1800, compute_time_s=12.9),
+        64: dict(num_batches=235, lambda_memory_mb=1700, compute_time_s=10.5),
+    }
+    return rows[batch_size]
+
+
+def paper_table3_row(batch_size: int) -> Dict[str, float]:
+    rows = {
+        1024: dict(compute_time_s=258.0),
+        512: dict(compute_time_s=278.4),
+        128: dict(compute_time_s=330.4),
+        64: dict(compute_time_s=394.8),
+    }
+    return rows[batch_size]

@@ -1,0 +1,73 @@
+"""RabbitMQ-analogue gradient mailboxes — paper §III-B.3.
+
+The paper gives every peer a dedicated queue holding a single *persistent*
+gradient message: a new gradient replaces the previous one ("latest wins"),
+and consumers read without deleting. That is register semantics, which we
+model two ways:
+
+* :class:`HostMailbox` — host-level, used by the local P2P cluster and the
+  async discrete-event simulator. Also models the paper's 100 MB message cap
+  (large payloads are "stored in S3 and referenced by UUID": we count the
+  indirection but deliver the payload either way).
+* device-level — in the distributed JAX path the mailbox is the all-gathered
+  register bank inside the train step (see ``repro/core/p2p.py``).
+"""
+from __future__ import annotations
+
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+MESSAGE_CAP_BYTES = 100 * 1024 * 1024  # Amazon MQ per-message limit
+
+
+@dataclass
+class Message:
+    payload: Any
+    publish_time: float
+    epoch: int
+    via_s3: bool = False
+    s3_uuid: Optional[str] = None
+
+
+class HostMailbox:
+    """One latest-wins queue per peer + a synchronization barrier queue."""
+
+    def __init__(self, num_peers: int):
+        self.num_peers = num_peers
+        self._queues: List[Optional[Message]] = [None] * num_peers
+        self._barrier: List[Tuple[int, int]] = []  # (peer, epoch) completions
+        self.stats = {"publishes": 0, "consumes": 0, "s3_indirections": 0}
+
+    # -- gradient queues ---------------------------------------------------
+    def publish(self, peer: int, payload: Any, *, nbytes: int, time: float, epoch: int):
+        via_s3 = nbytes > MESSAGE_CAP_BYTES
+        msg = Message(
+            payload, time, epoch,
+            via_s3=via_s3, s3_uuid=str(uuid.uuid4()) if via_s3 else None,
+        )
+        self._queues[peer] = msg  # replaces the previous message (latest wins)
+        self.stats["publishes"] += 1
+        if via_s3:
+            self.stats["s3_indirections"] += 1
+
+    def consume(self, peer: int, *, at_time: Optional[float] = None) -> Optional[Message]:
+        """Read (without deleting) peer's latest message visible at `at_time`."""
+        msg = self._queues[peer]
+        self.stats["consumes"] += 1
+        if msg is None:
+            return None
+        if at_time is not None and msg.publish_time > at_time:
+            return None  # not yet published at this simulated time
+        return msg
+
+    # -- synchronization barrier (paper §III-B.6) ---------------------------
+    def barrier_signal(self, peer: int, epoch: int):
+        self._barrier.append((peer, epoch))
+
+    def barrier_complete(self, epoch: int) -> bool:
+        done = {p for (p, e) in self._barrier if e == epoch}
+        return len(done) == self.num_peers
+
+    def barrier_reset(self, epoch: int):
+        self._barrier = [(p, e) for (p, e) in self._barrier if e != epoch]

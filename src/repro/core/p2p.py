@@ -1,0 +1,312 @@
+"""P2P distributed training — Algorithm 1 of the paper, on a TPU mesh.
+
+Peers are slices of the *manual* mesh axes (``peer_axes``); the serverless
+lambda pool / tensor parallelism is the remaining *auto* axis handled by
+GSPMD. The whole train step runs inside ``jax.shard_map`` manual over
+``peer_axes`` so the per-peer gradient ``g_{t,r}`` is a first-class value and
+the gradient exchange is an explicit, swappable collective:
+
+  exchange="allgather_mean"  (paper-faithful)
+      every peer publishes g_r to its queue and consumes everyone else's,
+      then averages locally  ->  all_gather over peers + local mean.
+      The all_gather *is* the synchronization barrier (§III-B.6).
+  exchange="psum_mean"       (beyond-paper optimized)
+      one fused all-reduce; mathematically identical, strictly less traffic
+      (no P-way buffer materialization).
+  exchange="qsgd"            (paper §III-B.4)
+      QSGD-quantize g_r, all_gather the int8 payload + bucket norms,
+      dequantize + average locally. 8/32 bits on the wire.
+
+Async (staleness-1) exchange keeps the mailbox register bank from the
+previous step in the training state — other peers' gradients are consumed
+one step stale, the paper's "latest available gradient" semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import compression as C
+from repro.optim import Optimizer, apply_updates, clip_by_global_norm
+
+
+@dataclass(frozen=True)
+class Topology:
+    """How the P2P system maps onto the mesh."""
+
+    peer_axes: Tuple[str, ...] = ("data",)  # manual axes: one peer per slice
+    lambda_axis: Optional[str] = "model"  # auto axis: serverless pool / TP
+    exchange: str = "allgather_mean"  # allgather_mean | psum_mean | qsgd
+    qsgd: Optional[C.QSGDConfig] = None
+    async_mode: bool = False  # staleness-1 mailbox exchange
+    serverless: bool = True  # fan micro-batches out over lambda_axis
+    grad_clip: float = 0.0
+    # beyond-paper knobs (EXPERIMENTS.md §Perf):
+    exchange_dtype: str = "float32"  # bfloat16 halves exchange wire bytes
+    cast_params_once: bool = False  # one bf16 cast per step -> bf16 ZeRO gathers
+    # Gradient accumulation: when a peer's m batches exceed the lambda
+    # slots (the paper's Step-Functions queueing case), split the peer
+    # batch into `accum_steps` sequential micro-rounds and average —
+    # AverageBatchesGradients with bounded activation memory.
+    accum_steps: int = 1
+
+    @property
+    def axis(self):
+        return self.peer_axes if len(self.peer_axes) > 1 else self.peer_axes[0]
+
+
+def peer_rank(topo: Topology) -> jnp.ndarray:
+    return lax.axis_index(topo.axis)
+
+
+def peer_count_static(topo: Topology, mesh) -> int:
+    n = 1
+    for a in topo.peer_axes:
+        n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Gradient exchange protocols (run inside the manual region)
+# ---------------------------------------------------------------------------
+
+
+def exchange_gradients(
+    grads, topo: Topology, key: Optional[jax.Array] = None, mailbox=None
+):
+    """Returns (averaged_grads, new_mailbox).
+
+    ``mailbox`` (async mode only) is the register bank of every peer's last
+    published gradient, shape (P, ...) per leaf.
+    """
+    if not topo.peer_axes:
+        return grads, mailbox
+
+    # Wire dtype: bf16 halves the exchange bytes (beyond-paper knob); the
+    # averaged result is promoted back to fp32 for the optimizer.
+    xdt = jnp.dtype(topo.exchange_dtype)
+
+    if topo.async_mode:
+        if mailbox is None:
+            raise ValueError("async exchange requires a mailbox state")
+        fresh_bank = jax.tree.map(
+            lambda g: lax.all_gather(g.astype(jnp.float32), topo.axis), grads
+        )
+        r = peer_rank(topo)
+        nP = fresh_bank and jax.tree.leaves(fresh_bank)[0].shape[0]
+
+        def combine(bank_old, g):
+            # own gradient fresh; others consumed from the (stale) mailbox
+            others = bank_old.sum(0) - bank_old[r]
+            return (others + g.astype(jnp.float32)) / nP
+
+        avg = jax.tree.map(combine, mailbox, grads)
+        return avg, fresh_bank
+
+    if topo.exchange == "allgather_mean":
+        # Algorithm 1: publish to own queue, consume all queues, average.
+        bank = jax.tree.map(
+            lambda g: lax.all_gather(g.astype(xdt), topo.axis), grads
+        )
+        avg = jax.tree.map(lambda b: b.astype(jnp.float32).mean(axis=0), bank)
+        return avg, mailbox
+
+    if topo.exchange == "psum_mean":
+        avg = jax.tree.map(
+            lambda g: lax.pmean(g.astype(xdt), topo.axis).astype(jnp.float32),
+            grads,
+        )
+        return avg, mailbox
+
+    if topo.exchange == "qsgd":
+        qcfg = topo.qsgd or C.QSGDConfig()
+        if key is None:
+            raise ValueError("qsgd exchange requires an rng key")
+        key = jax.random.fold_in(key, peer_rank(topo))
+
+        def leaf(g, k):
+            payload = C.quantize(g, k, qcfg)
+            lev = lax.all_gather(payload["levels"], topo.axis)  # (P, nb, B)
+            nrm = lax.all_gather(payload["norms"], topo.axis)  # (P, nb)
+            deq = jax.vmap(lambda l, n: C.qsgd_dequantize_ref(l, n, qcfg.levels))(
+                lev, nrm
+            )
+            flat = deq.mean(axis=0).reshape(-1)
+            n = g.size
+            return flat[:n].reshape(g.shape)
+
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        keys = jax.random.split(key, len(leaves))
+        avg = jax.tree_util.tree_unflatten(
+            treedef, [leaf(g, k) for g, k in zip(leaves, keys)]
+        )
+        return avg, mailbox
+
+    raise ValueError(f"unknown exchange {topo.exchange!r}")
+
+
+def init_mailbox(grads_like, num_peers: int):
+    return jax.tree.map(
+        lambda g: jnp.zeros((num_peers,) + g.shape, jnp.float32), grads_like
+    )
+
+
+# ---------------------------------------------------------------------------
+# Serverless intra-peer fan-out (paper §III-C)
+# ---------------------------------------------------------------------------
+
+
+def lambda_shard(batch: Dict[str, jnp.ndarray], topo: Topology):
+    """Fan the peer's micro-batches out over the lambda (auto) axis.
+
+    Inside the manual region the leading dim of every batch leaf is the
+    peer-local batch; constraining it over the lambda axis makes XLA compute
+    per-lambda partial gradients and reduce them — the TPU-native image of
+    the paper's parallel Lambda invocations + gradient averaging.
+    """
+    if not (topo.serverless and topo.lambda_axis):
+        return batch
+    ax = topo.lambda_axis
+    return jax.tree.map(
+        lambda x: lax.with_sharding_constraint(x, P(*((ax,) + (None,) * (x.ndim - 1)))),
+        batch,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The P2P train step builder
+# ---------------------------------------------------------------------------
+
+
+def build_p2p_train_step(
+    loss_fn: Callable,  # (params, batch) -> (loss, aux)
+    optimizer: Optimizer,
+    topo: Topology,
+    mesh,
+    schedule: Callable[[jnp.ndarray], jnp.ndarray],
+):
+    """Returns step(train_state, batch) -> (train_state, metrics).
+
+    train_state = {params, opt_state, step, key[, mailbox]}.
+    """
+
+    def peer_body(params, opt_state, step_idx, key, batch, mailbox):
+        batch = lambda_shard(batch, topo)
+        if topo.cast_params_once:
+            # One bf16 cast per step: ZeRO weight gathers then move bf16
+            # instead of fp32 (halves per-layer gather bytes). Master params
+            # and the optimizer stay fp32; norm vectors keep full precision.
+            compute_params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if (p.dtype == jnp.float32 and p.ndim >= 2)
+                else p,
+                params,
+            )
+        else:
+            compute_params = params
+        if topo.accum_steps > 1:
+            # sequential micro-rounds over the leading batch dim (each round
+            # still fans out over the lambda axis); grads averaged in fp32
+            n = topo.accum_steps
+
+            def split(x):
+                return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def round_fn(carry, mb):
+                (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    compute_params, mb
+                )
+                acc_g, acc_l, acc_a = carry
+                acc_g = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32) / n, acc_g, g
+                )
+                return (acc_g, acc_l + loss / n, acc_a + aux / n), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), compute_params
+            )
+            (grads, loss, aux), _ = lax.scan(
+                round_fn, (zeros, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                micro,
+            )
+        else:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                compute_params, batch
+            )
+        if topo.grad_clip:
+            grads, gnorm = clip_by_global_norm(grads, topo.grad_clip)
+        else:
+            gnorm = jnp.zeros((), jnp.float32)
+        step_key = jax.random.fold_in(key, step_idx)
+        avg, new_mailbox = exchange_gradients(grads, topo, step_key, mailbox)
+        lr = schedule(step_idx)
+        updates, opt_state = optimizer.update(avg, opt_state, params, lr)
+        params = apply_updates(params, updates)
+        if topo.peer_axes:
+            loss = lax.pmean(loss, topo.axis)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr, "aux": aux}
+        return params, opt_state, metrics, new_mailbox
+
+    if not topo.peer_axes:
+
+        def step(state, batch):
+            params, opt_state, metrics, mb = peer_body(
+                state["params"], state["opt_state"], state["step"], state["key"],
+                batch, state.get("mailbox"),
+            )
+            out = {**state, "params": params, "opt_state": opt_state,
+                   "step": state["step"] + 1}
+            if mb is not None:
+                out["mailbox"] = mb
+            return out, metrics
+
+        return step
+
+    batch_spec = P(topo.axis)
+    replicated = P()
+
+    def step(state, batch):
+        mailbox = state.get("mailbox")
+        bspec = jax.tree.map(lambda _: batch_spec, batch)
+        mspec = None if mailbox is None else jax.tree.map(lambda _: replicated, mailbox)
+        fn = jax.shard_map(
+            peer_body,
+            mesh=mesh,
+            in_specs=(
+                jax.tree.map(lambda _: replicated, state["params"]),
+                jax.tree.map(lambda _: replicated, state["opt_state"]),
+                replicated,
+                replicated,
+                bspec,
+                mspec,
+            ),
+            out_specs=(
+                jax.tree.map(lambda _: replicated, state["params"]),
+                jax.tree.map(lambda _: replicated, state["opt_state"]),
+                {"loss": replicated, "grad_norm": replicated, "lr": replicated,
+                 "aux": replicated},
+                mspec,
+            ),
+            axis_names=set(topo.peer_axes),
+            check_vma=False,
+        )
+        params, opt_state, metrics, mb = fn(
+            state["params"], state["opt_state"], state["step"], state["key"],
+            batch, mailbox,
+        )
+        out = {**state, "params": params, "opt_state": opt_state,
+               "step": state["step"] + 1}
+        if mb is not None:
+            out["mailbox"] = mb
+        return out, metrics
+
+    return step

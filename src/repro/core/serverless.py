@@ -1,0 +1,216 @@
+"""Serverless gradient offload — paper §III-C / §IV-D.
+
+Two halves:
+
+* :class:`ServerlessPlanner` — sizes the Lambda pool for a workload: memory
+  per function (from the model + batch footprint, mirroring the paper's
+  per-batch-size memory column in Table II), number of invocations, and the
+  Step-Functions-style dynamic fan-out plan.
+* :class:`ServerlessExecutor` — executes a peer's per-batch gradient
+  computations. The math runs for real (the gradient returned is exact);
+  wall-clock is *accounted* under the chosen backend:
+    - "instance": resource-constrained sequential processing (the paper's
+      PyTorch-on-small-EC2 baseline) -> sum of batch times.
+    - "serverless": parallel Lambda fan-out -> max of batch times, scaled by
+      the Lambda/instance speed ratio, plus invocation + orchestration
+      overheads.
+  On the TPU path the fan-out is not simulated at all — it is the lambda
+  mesh axis (see repro/core/p2p.py::lambda_shard).
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.cost import (
+    InstanceCost,
+    ServerlessCost,
+    ec2_cost_per_second,
+    lambda_cost_per_second,
+)
+
+LAMBDA_MAX_MEMORY_MB = 10_240  # AWS cap (paper §III-A)
+LAMBDA_TIMEOUT_S = 15 * 60
+LAMBDA_MB_PER_VCPU = 1_769  # AWS: 1 vCPU per 1769 MB
+DEPLOY_ZIP_CAP_MB = 50
+DEPLOY_UNZIPPED_CAP_MB = 250
+
+
+@dataclass(frozen=True)
+class LambdaSpec:
+    memory_mb: int
+    speedup_vs_instance: float  # Lambda vCPUs / instance vCPUs available
+
+    @property
+    def vcpus(self) -> float:
+        return self.memory_mb / LAMBDA_MB_PER_VCPU
+
+
+@dataclass(frozen=True)
+class StepFunctionPlan:
+    """The dynamically generated parallel state machine (paper §IV-D.3)."""
+
+    num_branches: int
+    lambda_spec: LambdaSpec
+    payload_keys: Tuple[str, ...]  # S3 batch keys, one per branch
+
+    def asl_sketch(self) -> Dict[str, Any]:
+        """Amazon-States-Language-shaped dict (for docs/tests)."""
+        return {
+            "StartAt": "ParallelGradients",
+            "States": {
+                "ParallelGradients": {
+                    "Type": "Map",
+                    "MaxConcurrency": self.num_branches,
+                    "ItemsPath": "$.batches",
+                    "Iterator": {
+                        "StartAt": "ComputeBatchGradient",
+                        "States": {
+                            "ComputeBatchGradient": {
+                                "Type": "Task",
+                                "Resource": "arn:aws:lambda:::function:grad",
+                                "End": True,
+                            }
+                        },
+                    },
+                    "End": True,
+                }
+            },
+        }
+
+
+class ServerlessPlanner:
+    """Sizes Lambda memory like the paper: the minimum that fits the model,
+    activations for one batch, and the runtime, rounded up to 64 MB."""
+
+    def __init__(self, *, runtime_overhead_mb: int = 700):
+        self.runtime_overhead_mb = runtime_overhead_mb
+
+    def lambda_memory_mb(self, model_bytes: int, batch_bytes: int) -> int:
+        # params + grads + activations(~2x batch) + runtime
+        need = (2 * model_bytes + 3 * batch_bytes) / 1e6 + self.runtime_overhead_mb
+        mb = int(math.ceil(need / 64.0) * 64)
+        if mb > LAMBDA_MAX_MEMORY_MB:
+            raise ValueError(
+                f"workload needs {mb} MB > Lambda cap {LAMBDA_MAX_MEMORY_MB} MB"
+            )
+        return max(mb, 128)
+
+    def plan(
+        self,
+        *,
+        model_bytes: int,
+        batch_bytes: int,
+        num_batches: int,
+        instance_vcpus: float = 1.0,
+        batch_keys: Optional[Sequence[str]] = None,
+    ) -> StepFunctionPlan:
+        mem = self.lambda_memory_mb(model_bytes, batch_bytes)
+        spec = LambdaSpec(
+            memory_mb=mem,
+            speedup_vs_instance=max((mem / LAMBDA_MB_PER_VCPU) / instance_vcpus, 0.25),
+        )
+        keys = tuple(batch_keys or (f"batch-{i:05d}" for i in range(num_batches)))
+        return StepFunctionPlan(num_batches, spec, keys)
+
+
+@dataclass
+class ExecutionReport:
+    backend: str
+    wall_time_s: float  # accounted wall-clock under the backend model
+    measured_compute_s: float  # actual CPU time spent on the gradients
+    per_batch_s: List[float]
+    num_batches: int
+    lambda_memory_mb: int = 0
+    cost_usd: float = 0.0
+
+
+class ServerlessExecutor:
+    """Runs per-batch gradient thunks and accounts time/cost per backend."""
+
+    def __init__(
+        self,
+        *,
+        backend: str = "serverless",  # "serverless" | "instance"
+        planner: Optional[ServerlessPlanner] = None,
+        instance: str = "t2.small",
+        instance_vcpus: float = 1.0,
+        invoke_overhead_s: float = 0.15,  # warm-start + S3 batch fetch
+        orchestration_overhead_s: float = 0.30,  # Step Functions state machine
+    ):
+        assert backend in ("serverless", "instance")
+        self.backend = backend
+        self.planner = planner or ServerlessPlanner()
+        self.instance = instance
+        self.instance_vcpus = instance_vcpus
+        self.invoke_overhead_s = invoke_overhead_s
+        self.orchestration_overhead_s = orchestration_overhead_s
+
+    def run(
+        self,
+        grad_thunks: Sequence[Callable[[], Any]],
+        *,
+        model_bytes: int,
+        batch_bytes: int,
+        combine: Callable[[List[Any]], Any],
+    ) -> Tuple[Any, ExecutionReport]:
+        """Execute every thunk (exact math), account wall time per backend."""
+        results: List[Any] = []
+        per_batch: List[float] = []
+        for thunk in grad_thunks:
+            t0 = time.perf_counter()
+            out = thunk()
+            jax.block_until_ready(out)
+            per_batch.append(time.perf_counter() - t0)
+            results.append(out)
+        measured = float(sum(per_batch))
+        g = combine(results)
+
+        if self.backend == "instance":
+            report = ExecutionReport(
+                backend="instance",
+                wall_time_s=measured,
+                measured_compute_s=measured,
+                per_batch_s=per_batch,
+                num_batches=len(per_batch),
+                cost_usd=InstanceCost(measured, self.instance).cost_per_peer,
+            )
+            return g, report
+
+        plan = self.planner.plan(
+            model_bytes=model_bytes,
+            batch_bytes=batch_bytes,
+            num_batches=len(per_batch),
+            instance_vcpus=self.instance_vcpus,
+        )
+        speed = plan.lambda_spec.speedup_vs_instance
+        lam_times = [t / speed + self.invoke_overhead_s for t in per_batch]
+        if lam_times and max(lam_times) > LAMBDA_TIMEOUT_S:
+            raise ValueError(
+                f"a batch needs {max(lam_times):.0f}s on a "
+                f"{plan.lambda_spec.memory_mb}MB Lambda — exceeds the "
+                f"{LAMBDA_TIMEOUT_S}s cap (paper §III-A); shrink the batch "
+                "or raise memory"
+            )
+        wall = self.orchestration_overhead_s + (max(lam_times) if lam_times else 0.0)
+        cost = ServerlessCost(
+            compute_time_s=wall,
+            num_batches=len(per_batch),
+            lambda_memory_mb=plan.lambda_spec.memory_mb,
+            instance=self.instance,
+        ).cost_per_peer
+        report = ExecutionReport(
+            backend="serverless",
+            wall_time_s=wall,
+            measured_compute_s=measured,
+            per_batch_s=per_batch,
+            num_batches=len(per_batch),
+            lambda_memory_mb=plan.lambda_spec.memory_mb,
+            cost_usd=cost,
+        )
+        return g, report

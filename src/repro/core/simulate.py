@@ -1,0 +1,323 @@
+"""Local P2P cluster — a literal, runnable Algorithm 1.
+
+Runs P peers in one process with *real* per-peer models, optimizers, data
+partitions, gradient mailboxes and (optionally) the serverless executor.
+This is what the paper's CNN experiments run on: Table I (stage resources),
+Fig. 3 (serverless speedup), Fig. 4 (compute/comm scaling), Fig. 5 (QSGD),
+Fig. 6 (sync vs async convergence).
+
+Synchronous mode executes epochs in lockstep with the RabbitMQ barrier
+semantics. Asynchronous mode is a discrete-event simulation: each peer has a
+speed factor, advances its own virtual clock by its *measured* compute time
+x speed, publishes gradients at completion instants, and consumes whatever
+other-peer gradients are visible at its own clock — the paper's "latest
+available, possibly stale" behaviour, which is what destabilizes async
+convergence in Fig. 6.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs.base import ModelConfig
+from repro.core import compression as C
+from repro.core.convergence import ConvergenceDetector
+from repro.core.mailbox import HostMailbox
+from repro.core.serverless import ExecutionReport, ServerlessExecutor
+from repro.data import DataLoader, Dataset, Partitioner, BatchKey
+from repro.metrics import StageMetrics
+from repro.optim import Optimizer, apply_updates
+
+
+def cnn_loss(params, batch, cfg):
+    logits, _ = models.forward(params, batch, cfg)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    loss = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = (logits.argmax(-1) == labels).mean()
+    return loss, acc
+
+
+@dataclass
+class PeerState:
+    rank: int
+    params: Any
+    opt_state: Any
+    loader: DataLoader
+    metrics: StageMetrics
+    clock: float = 0.0  # virtual time (async mode)
+    speed: float = 1.0  # relative compute speed
+    steps_done: int = 0
+    comm_bytes_sent: int = 0
+    send_time_s: float = 0.0
+    recv_time_s: float = 0.0
+    compute_time_s: float = 0.0
+    reports: List[ExecutionReport] = field(default_factory=list)
+
+
+class LocalP2PCluster:
+    """P peers, real compute, mailbox exchange, sync or async."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        dataset: Dataset,
+        *,
+        num_peers: int,
+        batch_size: int,
+        batches_per_epoch: int,
+        optimizer: Optimizer,
+        lr: float = 0.001,
+        sync: bool = True,
+        executor: Optional[ServerlessExecutor] = None,
+        qsgd: Optional[C.QSGDConfig] = None,
+        network_bandwidth_bps: float = 1e9,  # simulated inter-peer link
+        peer_speeds: Optional[Sequence[float]] = None,
+        seed: int = 0,
+    ):
+        import dataclasses as _dc
+
+        if cfg.family == "cnn" and dataset.kind == "image":
+            cfg = _dc.replace(
+                cfg,
+                image_size=dataset.image_hw,
+                image_channels=dataset.channels,
+                num_classes=dataset.num_classes,
+            )
+        self.cfg = cfg
+        self.dataset = dataset
+        self.num_peers = num_peers
+        self.batch_size = batch_size
+        self.batches_per_epoch = batches_per_epoch
+        self.optimizer = optimizer
+        self.sync = sync
+        self.executor = executor
+        self.qsgd = qsgd
+        self.bw = network_bandwidth_bps
+        self.mailbox = HostMailbox(num_peers)
+        self.detector = ConvergenceDetector(lr, mode="max", max_epochs=10_000)
+        self.key = jax.random.PRNGKey(seed)
+
+        part = Partitioner(dataset, num_peers, shuffle_seed=seed)
+        init_params = models.init_model(jax.random.PRNGKey(seed), cfg)
+        self.peers: List[PeerState] = []
+        speeds = list(peer_speeds or [1.0] * num_peers)
+        for r in range(num_peers):
+            self.peers.append(
+                PeerState(
+                    rank=r,
+                    params=jax.tree.map(jnp.copy, init_params),
+                    opt_state=optimizer.init(init_params),
+                    loader=DataLoader(part, r, batch_size),
+                    metrics=StageMetrics(),
+                    speed=speeds[r],
+                )
+            )
+
+        cfg_static = cfg
+
+        @jax.jit
+        def _grad(params, batch):
+            (loss, acc), g = jax.value_and_grad(cnn_loss, has_aux=True)(
+                params, batch, cfg_static
+            )
+            return g, loss, acc
+
+        self._grad = _grad
+
+        @jax.jit
+        def _apply(params, opt_state, avg_grads, lr):
+            upd, opt_state = optimizer.update(avg_grads, opt_state, params, lr)
+            return apply_updates(params, upd), opt_state
+
+        self._apply = _apply
+
+        @jax.jit
+        def _eval(params, batch):
+            return cnn_loss(params, batch, cfg_static)
+
+        self._eval = _eval
+
+        self._model_bytes = sum(x.size * 4 for x in jax.tree.leaves(init_params))
+
+        # Warm the jit caches so stage timings measure compute, not compilation.
+        wb = jax.tree.map(jnp.asarray, self.peers[0].loader.load(BatchKey(0, 0, 0)))
+        g0, _, _ = self._grad(init_params, wb)
+        jax.block_until_ready(
+            self._apply(init_params, self.peers[0].opt_state, g0, jnp.float32(lr))
+        )
+        jax.block_until_ready(self._eval(init_params, wb))
+
+    # ------------------------------------------------------------------
+    def _batch_thunks(self, peer: PeerState, epoch: int):
+        keys = [
+            BatchKey(peer.rank, epoch, i % peer.loader.num_batches)
+            for i in range(self.batches_per_epoch)
+        ]
+        batches = [jax.tree.map(jnp.asarray, peer.loader.load(k)) for k in keys]
+
+        def mk(b):
+            return lambda: self._grad(peer.params, b)
+
+        return [mk(b) for b in batches], batches
+
+    def _compute_peer_gradient(self, peer: PeerState, epoch: int):
+        """ComputeBatchGradients + AverageBatchesGradients (Algorithm 1)."""
+        thunks, batches = self._batch_thunks(peer, epoch)
+        batch_bytes = sum(
+            sum(np.asarray(v).nbytes for v in b.values()) for b in batches
+        ) // max(len(batches), 1)
+
+        def combine(outs):
+            gs = [o[0] for o in outs]
+            avg = jax.tree.map(lambda *xs: sum(x.astype(jnp.float32) for x in xs) / len(xs), *gs)
+            loss = float(np.mean([float(o[1]) for o in outs]))
+            acc = float(np.mean([float(o[2]) for o in outs]))
+            return avg, loss, acc
+
+        if self.executor is not None:
+            (g, loss, acc), report = self.executor.run(
+                thunks,
+                model_bytes=self._model_bytes,
+                batch_bytes=batch_bytes,
+                combine=combine,
+            )
+            peer.reports.append(report)
+            compute_wall = report.wall_time_s
+        else:
+            t0 = time.perf_counter()
+            outs = [t() for t in thunks]
+            g, loss, acc = combine(outs)
+            compute_wall = time.perf_counter() - t0
+        peer.compute_time_s += compute_wall
+        return g, loss, acc, compute_wall
+
+    def _publish(self, peer: PeerState, grads, epoch: int, at_time: float):
+        """SendGradientsToMyQueue, with optional QSGD compression."""
+        with peer.metrics.stage("send_gradients"):
+            if self.qsgd is not None:
+                self.key, sub = jax.random.split(self.key)
+                payload, _ = C.quantize_tree(grads, sub, self.qsgd)
+                nbytes = C.payload_bytes(payload)
+                msg = ("qsgd", payload)
+            else:
+                nbytes = C.raw_bytes(grads)
+                msg = ("raw", grads)
+            jax.block_until_ready(jax.tree.leaves(msg[1]))
+            wire_s = nbytes * 8 / self.bw
+            self.mailbox.publish(
+                peer.rank, msg, nbytes=nbytes, time=at_time + wire_s, epoch=epoch
+            )
+        peer.comm_bytes_sent += nbytes
+        peer.send_time_s += wire_s
+        return nbytes
+
+    def _consume_all(self, peer: PeerState, own_grads, at_time: Optional[float]):
+        """ConsumeGradientsFromQueue for every other peer (Algorithm 1)."""
+        grads_peers = {peer.rank: own_grads}
+        with peer.metrics.stage("receive_gradients"):
+            for other in range(self.num_peers):
+                if other == peer.rank:
+                    continue
+                msg = self.mailbox.consume(other, at_time=at_time)
+                if msg is None:
+                    continue  # async: nothing published yet -> skip
+                kind, payload = msg.payload
+                if kind == "qsgd":
+                    g = C.dequantize_tree(payload, self.qsgd)
+                    g = jax.tree.map(
+                        lambda a, b: a.reshape(b.shape), g, own_grads
+                    )
+                else:
+                    g = payload
+                grads_peers[other] = g
+                wire_s = 0.0  # receive wire time folded into publish latency
+                peer.recv_time_s += wire_s
+        return grads_peers
+
+    def _update(self, peer: PeerState, grads_peers: Dict[int, Any], lr: float):
+        with peer.metrics.stage("model_update"):
+            n = len(grads_peers)
+            avg = jax.tree.map(
+                lambda *xs: sum(x.astype(jnp.float32) for x in xs) / n,
+                *grads_peers.values(),
+            )
+            peer.params, peer.opt_state = self._apply(
+                peer.params, peer.opt_state, avg, jnp.float32(lr)
+            )
+            jax.block_until_ready(jax.tree.leaves(peer.params))
+        peer.steps_done += 1
+
+    def evaluate(self, peer_rank: int = 0, *, num_batches: int = 2, epoch: int = 10_000):
+        peer = self.peers[peer_rank]
+        accs, losses = [], []
+        with peer.metrics.stage("convergence_detection"):
+            for i in range(num_batches):
+                b = jax.tree.map(
+                    jnp.asarray, peer.loader.load(BatchKey(peer.rank, epoch, i))
+                )
+                loss, acc = self._eval(peer.params, b)
+                losses.append(float(loss))
+                accs.append(float(acc))
+        return float(np.mean(losses)), float(np.mean(accs))
+
+    # ------------------------------------------------------------------
+    def run_epoch_sync(self, epoch: int) -> Dict[str, float]:
+        """One synchronous epoch: compute -> publish -> barrier -> consume -> update."""
+        grads, stats = {}, []
+        for peer in self.peers:
+            with peer.metrics.stage("compute_gradients"):
+                g, loss, acc, wall = self._compute_peer_gradient(peer, epoch)
+            grads[peer.rank] = g
+            stats.append((loss, acc))
+            self._publish(peer, g, epoch, at_time=0.0)
+            self.mailbox.barrier_signal(peer.rank, epoch)
+        assert self.mailbox.barrier_complete(epoch)  # SynchronisationBarrier
+        self.mailbox.barrier_reset(epoch)
+        for peer in self.peers:
+            gp = self._consume_all(peer, grads[peer.rank], at_time=None)
+            self._update(peer, gp, self.detector.lr)
+        loss = float(np.mean([s[0] for s in stats]))
+        acc = float(np.mean([s[1] for s in stats]))
+        return {"loss": loss, "acc": acc}
+
+    def run_epoch_async(self, epoch: int) -> Dict[str, float]:
+        """Discrete-event async epoch: no barrier, stale gradients allowed."""
+        events = [(p.clock, p.rank) for p in self.peers]
+        heapq.heapify(events)
+        stats = []
+        while events:
+            _, rank = heapq.heappop(events)
+            peer = self.peers[rank]
+            with peer.metrics.stage("compute_gradients"):
+                g, loss, acc, wall = self._compute_peer_gradient(peer, epoch)
+            sim_wall = wall * peer.speed
+            peer.clock += sim_wall
+            self._publish(peer, g, epoch, at_time=peer.clock)
+            gp = self._consume_all(peer, g, at_time=peer.clock)
+            self._update(peer, gp, self.detector.lr)
+            stats.append((loss, acc))
+        loss = float(np.mean([s[0] for s in stats]))
+        acc = float(np.mean([s[1] for s in stats]))
+        return {"loss": loss, "acc": acc}
+
+    def run(self, epochs: int, *, eval_every: int = 1) -> List[Dict[str, float]]:
+        history = []
+        for e in range(epochs):
+            rec = self.run_epoch_sync(e) if self.sync else self.run_epoch_async(e)
+            if (e + 1) % eval_every == 0:
+                vloss, vacc = self.evaluate(epoch=10_000 + e)
+                rec.update(val_loss=vloss, val_acc=vacc)
+                if self.detector.step(vacc):
+                    history.append({**rec, "epoch": e, "converged": True})
+                    break
+            history.append({**rec, "epoch": e})
+        return history

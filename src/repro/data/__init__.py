@@ -1,0 +1,9 @@
+from repro.data.pipeline import (
+    Dataset,
+    make_dataset,
+    Partitioner,
+    DataLoader,
+    BatchKey,
+)
+
+__all__ = ["Dataset", "make_dataset", "Partitioner", "DataLoader", "BatchKey"]

@@ -1,0 +1,59 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container validates kernels in
+interpret mode on CPU; on a real TPU backend the compiled kernels run).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import qsgd as _qsgd
+from repro.kernels import ssd_scan as _ssd
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def qsgd_quantize(buckets: jnp.ndarray, u: jnp.ndarray, s: int):
+    return _qsgd.qsgd_quantize(buckets, u, s, interpret=default_interpret())
+
+
+def qsgd_dequantize(levels: jnp.ndarray, norms: jnp.ndarray, s: int):
+    return _qsgd.qsgd_dequantize(levels, norms, s, interpret=default_interpret())
+
+
+def ssd_scan(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    A: jnp.ndarray,
+    Bm: jnp.ndarray,
+    Cm: jnp.ndarray,
+    *,
+    chunk: int = 256,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+    y = _ssd.ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=default_interpret())
+    return y, None
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    softcap: float = 0.0,
+    window: int = 0,
+    block_q: int = 512,
+    block_kv: int = 512,
+) -> jnp.ndarray:
+    return _fa.flash_attention(
+        q, k, v,
+        causal=causal, softcap=softcap, window=window,
+        block_q=block_q, block_kv=block_kv,
+        interpret=default_interpret(),
+    )

@@ -1,0 +1,98 @@
+"""QSGD quantize/dequantize Pallas TPU kernels.
+
+The gradient tensor is pre-bucketed to (nb, BUCKET) f32. Each grid step
+processes a (TILE_NB, BUCKET) tile resident in VMEM: one fp32 L2-norm
+reduction per bucket row plus elementwise stochastic rounding — VPU work,
+8x128-lane aligned (BUCKET is a multiple of 128, TILE_NB a multiple of 8).
+Uniform randoms are passed in as an operand so the kernel is a pure function
+(deterministic vs the oracle; on-chip PRNG would break bit-reproducibility
+between interpret mode and the jnp reference).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_NB = 8  # bucket rows per grid step (sublane-aligned)
+
+
+def _quantize_kernel(x_ref, u_ref, s_ref, lev_ref, nrm_ref):
+    x = x_ref[...].astype(jnp.float32)  # (TILE_NB, BUCKET)
+    u = u_ref[...].astype(jnp.float32)
+    s = s_ref[0]
+    norms = jnp.sqrt(jnp.sum(x * x, axis=-1))  # (TILE_NB,)
+    safe = jnp.maximum(norms, 1e-30)[:, None]
+    r = jnp.abs(x) / safe * s
+    l = jnp.floor(r)
+    xi = l + (u < (r - l)).astype(jnp.float32)
+    lev = jnp.clip(xi, 0.0, s) * jnp.sign(x)
+    lev_ref[...] = lev.astype(jnp.int8)
+    nrm_ref[...] = norms.astype(jnp.float32)
+
+
+def _dequantize_kernel(lev_ref, nrm_ref, s_ref, out_ref):
+    lev = lev_ref[...].astype(jnp.float32)
+    nrm = nrm_ref[...].astype(jnp.float32)
+    out_ref[...] = lev * (nrm[:, None] / s_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret"))
+def qsgd_quantize(buckets: jnp.ndarray, u: jnp.ndarray, s: int, *, interpret: bool = True):
+    """buckets, u: (nb, BUCKET) f32 -> (levels int8 (nb, BUCKET), norms f32 (nb,))."""
+    nb, bucket = buckets.shape
+    assert bucket % 128 == 0, f"bucket {bucket} must be lane-aligned (128)"
+    pad = (-nb) % TILE_NB
+    if pad:
+        buckets = jnp.pad(buckets, ((0, pad), (0, 0)))
+        u = jnp.pad(u, ((0, pad), (0, 0)), constant_values=1.0)
+    nbp = nb + pad
+    grid = (nbp // TILE_NB,)
+    s_arr = jnp.full((1,), float(s), jnp.float32)
+    lev, nrm = pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_NB, bucket), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_NB, bucket), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_NB, bucket), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_NB,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nbp, bucket), jnp.int8),
+            jax.ShapeDtypeStruct((nbp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(buckets, u, s_arr)
+    return lev[:nb], nrm[:nb]
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret"))
+def qsgd_dequantize(levels: jnp.ndarray, norms: jnp.ndarray, s: int, *, interpret: bool = True):
+    """levels (nb, BUCKET) int8, norms (nb,) -> f32 (nb, BUCKET)."""
+    nb, bucket = levels.shape
+    assert bucket % 128 == 0
+    pad = (-nb) % TILE_NB
+    if pad:
+        levels = jnp.pad(levels, ((0, pad), (0, 0)))
+        norms = jnp.pad(norms, (0, pad))
+    nbp = nb + pad
+    s_arr = jnp.full((1,), float(s), jnp.float32)
+    out = pl.pallas_call(
+        _dequantize_kernel,
+        grid=(nbp // TILE_NB,),
+        in_specs=[
+            pl.BlockSpec((TILE_NB, bucket), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_NB,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_NB, bucket), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbp, bucket), jnp.float32),
+        interpret=interpret,
+    )(levels, norms, s_arr)
+    return out[:nb]

@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are deliberately naive/sequential formulations — the ground truth the
+kernels (run in interpret mode on CPU, compiled on TPU) are validated
+against in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# QSGD (same math as repro.core.compression, re-exported for kernel tests)
+# ---------------------------------------------------------------------------
+from repro.core.compression import qsgd_quantize_ref, qsgd_dequantize_ref  # noqa: F401
+
+
+# ---------------------------------------------------------------------------
+# SSD: naive per-timestep recurrence  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t
+# ---------------------------------------------------------------------------
+
+
+def ssd_scan_ref(
+    x: jnp.ndarray,  # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H)
+    A: jnp.ndarray,  # (H,)
+    Bm: jnp.ndarray,  # (B, S, G, N)
+    Cm: jnp.ndarray,  # (B, S, G, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential reference. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    f32 = jnp.float32
+    Bh = jnp.repeat(Bm.astype(f32), rep, axis=2)  # (B,S,H,N)
+    Ch = jnp.repeat(Cm.astype(f32), rep, axis=2)
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(dt_t * A.astype(f32))  # (B,H)
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", x_t * dt_t[..., None], B_t
+        )
+        y_t = jnp.einsum("bhpn,bhn->bhp", h, C_t)
+        return h, y_t
+
+    h0 = jnp.zeros((Bsz, H, Pd, N), f32)
+    xs = (
+        x.astype(f32).swapaxes(0, 1),
+        dt.astype(f32).swapaxes(0, 1),
+        Bh.swapaxes(0, 1),
+        Ch.swapaxes(0, 1),
+    )
+    hT, ys = lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1), hT
+
+
+# ---------------------------------------------------------------------------
+# Attention: naive full-softmax causal attention
+# ---------------------------------------------------------------------------
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, S, H, D)
+    k: jnp.ndarray,  # (B, S, K, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    softcap: float = 0.0,
+    window: int = 0,
+) -> jnp.ndarray:
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, S, K, G, D) / math.sqrt(D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    i = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= i[:, None] >= i[None, :]
+        if window:
+            mask &= i[:, None] - i[None, :] < window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D)

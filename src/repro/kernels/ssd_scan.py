@@ -1,0 +1,125 @@
+"""Chunked SSD (Mamba-2) scan as a Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060 §6): the GPU version
+leans on warp-level parallel prefix scans; on TPU we restructure the
+computation around the MXU — each chunk is processed with dense
+(chunk x chunk) and (chunk x state) matmuls, and the inter-chunk recurrence
+is carried in a VMEM scratch accumulator across sequential grid steps
+(the TPU grid is executed in order, which *is* the scan).
+
+Grid: (B, H, num_chunks) — chunks innermost, so the state scratch carries
+the running (P, N) state for one (batch, head) pair and is reset whenever a
+new (b, h) pair begins.
+
+Blocks (per grid step, all VMEM, f32):
+  x   (Q, P)   Q = chunk (default 256, multiple of 8), P = headdim
+  dt  (Q,)     B/C (Q, N) — group-mapped via the index_map (no repeat in HBM)
+  L   (Q, Q)   intra-chunk decay matrix, built on the fly
+  y   (Q, P)   output block
+  state scratch (P, N)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, *, nc: int):
+    c_idx = pl.program_id(2)
+
+    @pl.when(c_idx == 0)
+    def _():
+        st_ref[...] = jnp.zeros_like(st_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)  # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)  # (Q,)
+    A = a_ref[0]  # scalar decay rate for this head
+    Bm = b_ref[0, 0, 0].astype(jnp.float32)  # (Q, N)
+    Cm = c_ref[0, 0, 0].astype(jnp.float32)  # (Q, N)
+
+    a = dt * A  # (Q,) log-decay
+    cum = jnp.cumsum(a)  # inclusive
+    # L[i, j] = exp(cum_i - cum_j) for i >= j else 0
+    diff = cum[:, None] - cum[None, :]
+    Q = x.shape[0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    # mask before exp (upper triangle would overflow; see models/ssm.py)
+    Lmat = jnp.exp(jnp.where(ii >= jj, diff, -jnp.inf))
+
+    xdt = x * dt[:, None]  # (Q, P)
+
+    # intra-chunk (dual / "attention" form): (C B^T . L) @ xdt  -> MXU matmuls
+    scores = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32) * Lmat
+    y = jnp.dot(scores, xdt, preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state
+    state = st_ref[...]  # (P, N)
+    decay_from_start = jnp.exp(cum)  # (Q,)
+    y += jnp.dot(Cm, state.T, preferred_element_type=jnp.float32) * decay_from_start[:, None]
+
+    # update the carried state: S <- exp(sum a) S + sum_j exp(cum_Q - cum_j) B_j xdt_j
+    decay_to_end = jnp.exp(cum[-1] - cum)  # (Q,)
+    new_state = jnp.dot(
+        (xdt * decay_to_end[:, None]).T, Bm, preferred_element_type=jnp.float32
+    )  # (P, N)
+    st_ref[...] = state * jnp.exp(cum[-1]) + new_state
+
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    x: jnp.ndarray,  # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H)
+    A: jnp.ndarray,  # (H,)
+    Bm: jnp.ndarray,  # (B, S, G, N)
+    Cm: jnp.ndarray,  # (B, S, G, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = True,
+):
+    """Returns y (B, S, H, P) f32. (Final state is recoverable but not
+    returned — training/prefill is the kernel's role; decode uses the O(1)
+    recurrent step which needs no kernel.)"""
+    Bsz, S, H, Pd = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    # kernel layouts: x (B,H,nc,Q,P); dt (B,H,nc,Q); B/C (B,G,nc,Q,N)
+    xk = x.transpose(0, 2, 1, 3).reshape(Bsz, H, nc, chunk, Pd)
+    dtk = dt.transpose(0, 2, 1).reshape(Bsz, H, nc, chunk)
+    Bk = Bm.transpose(0, 2, 1, 3).reshape(Bsz, G, nc, chunk, N)
+    Ck = Cm.transpose(0, 2, 1, 3).reshape(Bsz, G, nc, chunk, N)
+
+    rep = H // G
+
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, nc=nc),
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, Pd), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, 1, 1, chunk, N), lambda b, h, c: (b, h // rep, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk, N), lambda b, h, c: (b, h // rep, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, chunk, Pd), lambda b, h, c: (b, h, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, H, nc, chunk, Pd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((Pd, N), jnp.float32)],
+        interpret=interpret,
+    )(xk, dtk, A.astype(jnp.float32), Bk, Ck)
+
+    y = y.reshape(Bsz, H, Sp, Pd).transpose(0, 2, 1, 3)[:, :S]
+    return y

@@ -1,0 +1,268 @@
+"""HLO text analyzer: true FLOPs / dot-traffic / collective bytes with
+while-loop trip-count scaling.
+
+``compiled.cost_analysis()`` counts every while body exactly once (verified:
+a 2-layer and an 8-layer scanned stack report identical FLOPs), which makes
+it useless for scan-over-layers models. This analyzer parses the
+post-partitioning HLO text instead:
+
+* builds the computation call graph (while bodies, fusions, calls),
+* recovers while trip counts from the loop-condition's `constant(N)`,
+* counts per-instruction FLOPs for dot/convolution ops (2 * |out| * K),
+* counts operand+result bytes of dots (a fused-elementwise lower bound on
+  HBM traffic), and
+* sums result bytes of all-gather / all-reduce / reduce-scatter / all-to-all
+  / collective-permute ops,
+
+each multiplied by the product of enclosing trip counts. Numbers are
+per-device (the module is the post-SPMD per-partition program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _parse_shape(s: str) -> Tuple[str, Tuple[int, ...]]:
+    m = _SHAPE_RE.match(s.strip())
+    if not m:
+        return ("", ())
+    dims = tuple(int(d) for d in m.group(2).split(",")) if m.group(2) else ()
+    return m.group(1), dims
+
+
+def _nbytes(ty: str, dims: Tuple[int, ...]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _BYTES.get(ty, 4)
+
+
+def _all_shapes_bytes(type_str: str) -> int:
+    """Total bytes over every array shape mentioned in a (maybe tuple) type."""
+    total = 0
+    for t, d in _SHAPE_RE.findall(type_str):
+        dims = tuple(int(x) for x in d.split(",")) if d else ()
+        total += _nbytes(t, dims)
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    ty: str  # result type string (may be tuple)
+    opcode: str
+    operands: List[str]
+    raw: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: Dict[str, Instr] = field(default_factory=dict)
+    order: List[str] = field(default_factory=list)
+
+
+_COMP_HEADER = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^()]*\)|[a-z0-9]+\[[0-9,]*\][^\s]*))\s*"
+    r"([\w\-]+)\((.*)$"
+)
+_OPERAND = re.compile(r"%([\w\.\-]+)")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    current: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        if stripped.endswith("{") and "->" in stripped:
+            m = _COMP_HEADER.match(stripped)
+            if m:
+                current = Computation(m.group(2))
+                comps[current.name] = current
+                if m.group(1):
+                    entry = current.name
+                continue
+        if stripped == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        m = _INSTR.match(stripped)
+        if not m:
+            continue
+        name, ty, opcode, rest = m.groups()
+        # operand names = %refs before any attribute section
+        args_part = rest.split("), ")[0] if "), " in rest else rest
+        operands = _OPERAND.findall(args_part)
+        current.instrs[name] = Instr(name, ty, opcode, operands, stripped)
+        current.order.append(name)
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    """Recover N from the loop bound constant in the condition computation.
+
+    Post-optimization the `compare(i, N), direction=LT` is often wrapped in a
+    fusion, so we take the largest positive s32 constant in the condition —
+    for counted jax loops (scan/fori/remat) that is the trip count.
+    """
+    best = 1
+    for ins in cond.instrs.values():
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", ins.raw)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops_bytes(ins: Instr, comp: Computation) -> Tuple[float, float]:
+    out_ty, out_dims = _parse_shape(ins.ty)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    # contraction size from lhs operand shape + lhs_contracting_dims
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.raw)
+    k = 1
+    if m and ins.operands:
+        lhs = comp.instrs.get(ins.operands[0])
+        if lhs is not None:
+            _, ldims = _parse_shape(lhs.ty)
+            for idx in (int(i) for i in m.group(1).split(",") if i):
+                if idx < len(ldims):
+                    k *= ldims[idx]
+    flops = 2.0 * out_n * k
+    byts = _nbytes(out_ty or "f32", out_dims)
+    for opn in ins.operands[:2]:
+        o = comp.instrs.get(opn)
+        if o is not None:
+            t, d = _parse_shape(o.ty)
+            byts += _nbytes(t, d)
+    return flops, byts
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    out_ty, out_dims = _parse_shape(ins.ty)
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    k = 1
+    if len(ins.operands) >= 2:
+        rhs = comp.instrs.get(ins.operands[1])
+        if rhs is not None:
+            _, rdims = _parse_shape(rhs.ty)
+            # kernel spatial dims x input features ~= prod(rhs)/output_features
+            n = 1
+            for d in rdims:
+                n *= d
+            of = max(out_dims[-1] if out_dims else 1, 1)
+            k = max(n // of, 1)
+    return 2.0 * out_n * k
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    dot_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    while_trips: List[int] = field(default_factory=list)
+
+    @property
+    def coll_total(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+def analyze(text: str) -> HloStats:
+    comps, entry = parse_hlo(text)
+    stats = HloStats()
+    if entry is None:
+        return stats
+
+    memo: Dict[str, Tuple[float, float, Dict[str, float]]] = {}
+
+    def visit(cname: str) -> Tuple[float, float, Dict[str, float]]:
+        if cname in memo:
+            return memo[cname]
+        comp = comps.get(cname)
+        if comp is None:
+            return (0.0, 0.0, {})
+        memo[cname] = (0.0, 0.0, {})  # cycle guard
+        flops = 0.0
+        dbytes = 0.0
+        coll: Dict[str, float] = {}
+
+        def add_coll(d: Dict[str, float], scale=1.0):
+            for k, v in d.items():
+                coll[k] = coll.get(k, 0.0) + v * scale
+
+        for ins in comp.instrs.values():
+            op = ins.opcode
+            if op == "dot":
+                f, b = _dot_flops_bytes(ins, comp)
+                flops += f
+                dbytes += b
+            elif op == "convolution":
+                flops += _conv_flops(ins, comp)
+            elif any(op.startswith(c) for c in COLLECTIVES):
+                if op.endswith("-done"):
+                    continue
+                base = next(c for c in COLLECTIVES if op.startswith(c))
+                coll[base] = coll.get(base, 0.0) + _all_shapes_bytes(ins.ty)
+            elif op == "while":
+                body = cond = None
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.raw)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ins.raw)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                stats.while_trips.append(trips)
+                if body:
+                    f, b, c = visit(body)
+                    flops += f * trips
+                    dbytes += b * trips
+                    add_coll(c, trips)
+            elif op in ("fusion", "call", "custom-call", "async-start"):
+                m = re.search(r"calls=%?([\w\.\-]+)", ins.raw)
+                if m:
+                    f, b, c = visit(m.group(1))
+                    flops += f
+                    dbytes += b
+                    add_coll(c)
+            elif op == "conditional":
+                for m in re.finditer(r"(?:branch_computations=\{([^}]*)\}|true_computation=%?([\w\.\-]+)|false_computation=%?([\w\.\-]+))", ins.raw):
+                    names = (m.group(1) or "").replace("%", "").split(",") if m.group(1) else [g for g in m.groups()[1:] if g]
+                    for nm in names:
+                        nm = nm.strip()
+                        if nm in comps:
+                            f, b, c = visit(nm)
+                            flops += f
+                            dbytes += b
+                            add_coll(c)
+        memo[cname] = (flops, dbytes, coll)
+        return memo[cname]
+
+    f, b, c = visit(entry)
+    stats.flops = f
+    stats.dot_bytes = b
+    stats.collective_bytes = c
+    return stats

@@ -1,0 +1,273 @@
+"""Sharding policy: parameter specs, activation axis rules, batch specs.
+
+Two regimes, chosen per architecture (DESIGN.md §4):
+
+* Regime A (non-FSDP archs — the paper's serverless P2P image).
+  Peers = the ("pod","data") axes (manual / shard_map). The "model" axis is
+  the *serverless lambda pool*: inside each peer the micro-batches fan out
+  over "model" (each lambda slot computes a micro-batch gradient; XLA's
+  reduction over the axis is the per-peer gradient average). Parameters are
+  *stored* sharded over "model" (ZeRO-3: like Lambda workers pulling model
+  shards from S3) and gathered per-layer for compute; activation tensor
+  rules stay unconstrained so GSPMD keeps batch-over-model throughout.
+
+* Regime B (fsdp=True archs: dbrx-132b, internvl2-26b, moonshot — too big
+  for replication). Peers = pods; within a pod classic 2D FSDP("data") x
+  TP("model"): weights shard output-features over "model" (Megatron
+  column/row split, expert dim for MoE) + largest remaining dim over
+  "data"; activations shard batch over "data" and heads/ff/experts over
+  "model".
+
+Prefill/decode always use TP-style (regime B) activation rules — the
+weight shardings align with head/ff activation sharding (column-parallel),
+so serving needs no ZeRO gathers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+MIN_SHARD_SIZE = 1 << 14  # leaves smaller than this stay replicated
+
+# weight-name classes for Megatron-style column/row splits
+_COL_PARALLEL = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "unembed"}
+_ROW_PARALLEL = {"wo", "w_down", "out_proj"}
+_EXPERT_NAMES = {"w_gate", "w_up", "w_down"}
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _div(dim: int, size: int) -> bool:
+    return dim % size == 0
+
+
+def sanitize_spec(shape: Tuple[int, ...], spec: P, mesh) -> P:
+    """Drop spec axes whose size doesn't divide the corresponding dim
+    (jit in_shardings require exact divisibility, unlike constraints)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None)
+            continue
+        axes = (entry,) if isinstance(entry, str) else tuple(entry)
+        keep = []
+        prod = 1
+        for a in axes:
+            sz = mesh.shape[a]
+            if _div(shape[i], prod * sz):
+                keep.append(a)
+                prod *= sz
+        if not keep:
+            out.append(None)
+        elif len(keep) == 1:
+            out.append(keep[0])
+        else:
+            out.append(tuple(keep))
+    return P(*out)
+
+
+def param_spec(
+    keys: Tuple[str, ...], shape: Tuple[int, ...], cfg: ModelConfig, mesh
+) -> P:
+    if len(shape) == 0 or int(np.prod(shape)) < MIN_SHARD_SIZE:
+        return P()
+    msz = mesh.shape["model"]
+    dsz = mesh.shape.get("data", 1)
+    spec: list = [None] * len(shape)
+    start = (
+        1
+        if keys and keys[0] in ("stack", "encoder", "decoder") and len(shape) > 1
+        else 0
+    )
+    name = keys[-1] if keys else ""
+    cand = list(range(start, len(shape)))
+
+    model_dim = None
+    is_expert = name in _EXPERT_NAMES and (len(shape) - start == 3)
+    if is_expert and _div(shape[start], msz):
+        model_dim = start  # expert-parallel
+    elif is_expert:
+        # E not divisible (granite's 40 experts on a 16-wide axis): fall back
+        # to Megatron *within* each expert — w_gate/w_up column-parallel (f),
+        # w_down row-parallel (f) -> one psum per MoE layer. Measured ~5%
+        # less prefill collective traffic vs sharding d (EXPERIMENTS.md §Perf).
+        model_dim = (len(shape) - 1) if name in ("w_gate", "w_up") else start + 1
+    elif name in _ROW_PARALLEL and _div(shape[start], msz):
+        model_dim = start
+    elif name in _COL_PARALLEL and _div(shape[-1], msz):
+        model_dim = len(shape) - 1
+    elif name == "embed" and _div(shape[0], msz):
+        model_dim = 0  # vocab-sharded embedding
+    if model_dim is None:
+        order = sorted(cand, key=lambda i: shape[i], reverse=True)
+        for i in order:
+            if _div(shape[i], msz):
+                model_dim = i
+                break
+        if model_dim is None:
+            for i in order:
+                if shape[i] >= msz:
+                    model_dim = i
+                    break
+    if model_dim is not None:
+        spec[model_dim] = "model"
+    # Embedding tables keep a single sharded axis: 2D-sharded gather operands
+    # inside a manual (shard_map) region hit an XLA SPMD PartitionGather
+    # CHECK-failure (spmd_partitioner_util.cc:504, cf. b/433785288). The
+    # memory cost of not FSDP-sharding the table's second axis is < 0.5
+    # GB/chip for every assigned arch.
+    if name in ("embed", "unembed"):
+        return P(*spec)
+    if cfg.fsdp and dsz > 1:
+        rest = sorted(
+            (i for i in cand if i != model_dim),
+            key=lambda i: shape[i],
+            reverse=True,
+        )
+        for i in rest:
+            if _div(shape[i], dsz) or shape[i] >= 4 * dsz:
+                spec[i] = "data"
+                break
+    return P(*spec)
+
+
+def param_shardings(params_shapes, cfg: ModelConfig, mesh):
+    """Pytree of NamedShardings matching a params (or opt-state) shape tree."""
+
+    def spec_for(path, leaf):
+        keys = _path_keys(path)
+        while keys and keys[0] in ("mu", "nu", "momentum"):
+            keys = keys[1:]
+        spec = param_spec(keys, tuple(leaf.shape), cfg, mesh)
+        return NamedSharding(mesh, sanitize_spec(tuple(leaf.shape), spec, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Activation logical-axis rules
+# ---------------------------------------------------------------------------
+
+
+def _fits(n: int, sz: int) -> bool:
+    return n % sz == 0 and n >= sz
+
+
+def activation_rules(
+    cfg: ModelConfig, shape: ShapeConfig, mesh, *, peer_axes: Tuple[str, ...] = ()
+) -> Dict[str, Any]:
+    msz = mesh.shape["model"]
+    batch_axes = [a for a in mesh.axis_names if a != "model"]
+    B = shape.global_batch
+
+    chosen_batch: list = []
+    nbatch = 1
+    for a in batch_axes:
+        if _fits(B, nbatch * mesh.shape[a]):
+            chosen_batch.append(a)
+            nbatch *= mesh.shape[a]
+
+    regime_a = not cfg.fsdp
+    if shape.mode == "train" and regime_a:
+        # Regime A: lambda (batch) parallelism over "model"; tensor rules off.
+        # The batch rule INCLUDES "model": inside the peer body the residual
+        # stream stays pinned batch-over-model, which forces XLA to gather
+        # the (small) ZeRO weight shards per layer instead of all-gathering
+        # the (huge) fp32 activations at every matmul — measured 4.8x less
+        # collective traffic on qwen2.5-3b train_4k (EXPERIMENTS.md §Perf).
+        # Input shardings are sanitized separately (global B may not divide
+        # by all 3 axes; the in-peer constraint still applies).
+        return {
+            "batch": (tuple(chosen_batch) or ()) + ("model",),
+            "embed": None, "ff": None, "heads": None, "kv_heads": None,
+            "experts": None, "vocab": None, "kv_seq": None, "seq": None,
+        }
+
+    rules: Dict[str, Any] = {
+        "batch": tuple(chosen_batch) or None,
+        "seq": None,  # sequence parallelism for the residual stream (opt-in)
+        "embed": None,
+        "ff": "model" if cfg.d_ff and _fits(cfg.d_ff, msz) else None,
+        "heads": "model" if cfg.num_heads and _fits(cfg.num_heads, msz) else None,
+        "kv_heads": "model"
+        if cfg.num_kv_heads and _fits(cfg.num_kv_heads, msz)
+        else None,
+        "experts": "model" if cfg.num_experts >= msz else None,
+        "vocab": "model" if cfg.vocab_size >= 4 * msz else None,
+        "kv_seq": None,
+    }
+    if cfg.ssm_state and _fits(cfg.ssm_heads, msz):
+        rules["heads"] = "model"
+    if shape.mode == "decode":
+        spare = tuple(a for a in batch_axes if a not in chosen_batch)
+        kv_axes = (() if rules["kv_heads"] else ("model",)) + spare
+        rules["kv_seq"] = kv_axes if kv_axes else None
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins) + their shardings
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules) -> Tuple[dict, dict]:
+    """(ShapeDtypeStructs, NamedShardings) for a train/prefill batch."""
+    import jax.numpy as jnp
+
+    B, S = shape.global_batch, shape.seq_len
+    bspec = P(rules["batch"]) if rules["batch"] else P()
+    bspec = sanitize_spec((B, S), bspec, mesh)
+    out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    sh = {"tokens": NamedSharding(mesh, bspec)}
+    if shape.mode == "train":
+        out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        sh["labels"] = NamedSharding(mesh, bspec)
+    if cfg.family == "vlm":
+        out["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16
+        )
+        sh["patches"] = NamedSharding(mesh, bspec)
+    if cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16
+        )
+        sh["frames"] = NamedSharding(mesh, bspec)
+    return out, sh
+
+
+def decode_state_shardings(state_shapes, cfg: ModelConfig, mesh, rules):
+    """Shardings for the decode cache pytree."""
+    batch_rule = rules["batch"]
+    kvh = rules["kv_heads"]
+    kvs = rules["kv_seq"]
+    heads = rules["heads"]
+
+    def spec_for(path, leaf):
+        keys = _path_keys(path)
+        nd = len(leaf.shape)
+        spec = [None] * nd
+        if nd and keys[-1] in ("k", "v") and nd >= 4:
+            lead = nd - 4  # (.., B, S, K, hd)
+            spec[lead + 0] = batch_rule
+            spec[lead + 1] = kvs
+            spec[lead + 2] = kvh
+        elif nd and keys[-1] == "ssm" and nd >= 4:
+            lead = nd - 4  # (.., B, H, P, N)
+            spec[lead + 0] = batch_rule
+            spec[lead + 1] = heads
+        elif nd and keys[-1] == "conv" and nd >= 3:
+            lead = nd - 3  # (.., B, K-1, C)
+            spec[lead + 0] = batch_rule
+        return NamedSharding(
+            mesh, sanitize_spec(tuple(leaf.shape), P(*spec), mesh)
+        )
+
+    return jax.tree_util.tree_map_with_path(spec_for, state_shapes)

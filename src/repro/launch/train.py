@@ -1,0 +1,114 @@
+"""Training driver: real steps on whatever devices exist.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --reduced \
+        --steps 50 --batch 8 --seq 64 --exchange allgather_mean
+
+On this CPU container you train REDUCED variants (or the paper's CNNs via
+benchmarks/); on a TPU slice the same driver runs the full configs with the
+production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import models
+from repro.configs import get_config, reduced
+from repro.core.compression import QSGDConfig
+from repro.core.convergence import ConvergenceDetector
+from repro.core.p2p import Topology
+from repro.data import BatchKey, DataLoader, Partitioner, make_dataset
+from repro.launch.mesh import make_host_mesh
+from repro.launch.sharding import activation_rules
+from repro.models.layers import axis_rules
+from repro.optim import adam, sgd
+from repro.optim.schedules import warmup_cosine
+from repro.train import build_train_step, init_train_state
+from repro.train import checkpoint as ckpt
+from repro.configs.base import ShapeConfig
+
+
+def make_lm_batch(loader: DataLoader, key: BatchKey, vocab: int):
+    b = loader.load(key)
+    return {
+        "tokens": jnp.asarray(b["tokens"] % vocab),
+        "labels": jnp.asarray(b["labels"] % vocab),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--optimizer", default="adam", choices=["adam", "sgd"])
+    ap.add_argument("--exchange", default="allgather_mean",
+                    choices=["allgather_mean", "psum_mean", "qsgd"])
+    ap.add_argument("--data-parallel", type=int, default=None)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg, vocab_size=512)
+    mesh = make_host_mesh(args.data_parallel, args.model_parallel)
+    npeers = mesh.shape["data"]
+    print(f"mesh={dict(mesh.shape)} peers={npeers} arch={cfg.name}")
+
+    topo = Topology(
+        peer_axes=("data",) if npeers > 1 else (),
+        lambda_axis="model" if mesh.shape["model"] > 1 else None,
+        exchange=args.exchange,
+        qsgd=QSGDConfig(levels=127, bucket=512) if args.exchange == "qsgd" else None,
+        serverless=mesh.shape["model"] > 1,
+    )
+    opt = adam() if args.optimizer == "adam" else sgd(momentum=0.9)
+    sched = warmup_cosine(args.lr, args.steps // 10 + 1, args.steps)
+    step_fn = build_train_step(cfg, opt, topo, mesh, sched)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+
+    ds = make_dataset("lm", size=200_000, vocab_size=cfg.vocab_size, seq_len=args.seq)
+    loader = DataLoader(Partitioner(ds, 1), 0, args.batch)
+
+    shape = ShapeConfig("host", args.seq, args.batch, "train")
+    rules = activation_rules(cfg, shape, mesh, peer_axes=topo.peer_axes)
+    detector = ConvergenceDetector(args.lr, mode="min", max_epochs=10**6)
+
+    jstep = jax.jit(step_fn)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        with axis_rules(rules):
+            for i in range(args.steps):
+                batch = make_lm_batch(
+                    loader, BatchKey(0, i // loader.num_batches, i % loader.num_batches),
+                    cfg.vocab_size,
+                )
+                state, metrics = jstep(state, batch)
+                if (i + 1) % args.log_every == 0 or i == 0:
+                    loss = float(metrics["loss"])
+                    print(
+                        f"step {i+1:5d} loss {loss:.4f} ce {float(metrics['aux']):.4f} "
+                        f"lr {float(metrics['lr']):.2e} "
+                        f"({(time.time()-t0)/(i+1):.2f} s/step)"
+                    )
+                    if detector.step(loss):
+                        print("converged (early stop)")
+                        break
+    if args.checkpoint:
+        ckpt.save(args.checkpoint, state["params"], step=int(state["step"]))
+        print(f"saved checkpoint to {args.checkpoint}")
+    return state
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.metrics.resources import StageMetrics, StageProbe
+
+__all__ = ["StageMetrics", "StageProbe"]

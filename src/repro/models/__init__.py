@@ -1,0 +1,95 @@
+"""Uniform model API over all families.
+
+``batch`` dicts carry, depending on family:
+  tokens  (B, S) int32      — all LM families
+  labels  (B, S) int32      — training targets (LM) / (B,) int32 (CNN)
+  patches (B, V, d) float   — VLM stubbed vision embeddings
+  frames  (B, F, d) float   — enc-dec stubbed audio frame embeddings
+  images  (B, H, W, C)      — CNN
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import cnn as _cnn
+from repro.models import transformer as _tf
+from repro.models.layers import Params
+
+
+def init_model(key, cfg: ModelConfig) -> Params:
+    if cfg.family == "cnn":
+        return _cnn.init_cnn(key, cfg)
+    if cfg.family == "encdec":
+        return _tf.init_encdec(key, cfg)
+    return _tf.init_lm(key, cfg)
+
+
+def forward(
+    params: Params,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    moe_dispatch: str = "dense",
+    use_ssd_kernel: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits, aux_loss)."""
+    if cfg.family == "cnn":
+        logits = _cnn.cnn_forward(params, batch["images"], cfg)
+        return logits, jnp.zeros((), jnp.float32)
+    if cfg.family == "encdec":
+        return _tf.encdec_forward(params, batch["frames"], batch["tokens"], cfg)
+    return _tf.lm_forward(
+        params, batch["tokens"], cfg,
+        patches=batch.get("patches"),
+        moe_dispatch=moe_dispatch,
+        use_ssd_kernel=use_ssd_kernel,
+    )
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int) -> Params:
+    if cfg.family == "cnn":
+        raise ValueError("CNNs have no decode step")
+    if cfg.family == "encdec":
+        return _tf.init_encdec_state(cfg, batch, seq_len)
+    return _tf.init_decode_state(cfg, batch, seq_len)
+
+
+def prefill(
+    params: Params,
+    state: Params,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    moe_dispatch: str = "dense",
+) -> Tuple[jnp.ndarray, Params]:
+    """One-shot prompt prefill into a decode state. Returns
+    (last-token logits, state positioned after the prompt)."""
+    if cfg.family == "cnn":
+        raise ValueError("CNNs have no decode step")
+    if cfg.family == "encdec":
+        return _tf.encdec_prefill(params, state, batch["frames"], batch["tokens"], cfg)
+    return _tf.lm_prefill(
+        params, state, batch["tokens"], cfg,
+        patches=batch.get("patches"), moe_dispatch=moe_dispatch,
+    )
+
+
+def decode_step(
+    params: Params,
+    state: Params,
+    token: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    moe_dispatch: str = "dense",
+) -> Tuple[jnp.ndarray, Params]:
+    if cfg.family == "encdec":
+        return _tf.encdec_decode_step(params, state, token, cfg)
+    return _tf.lm_decode_step(params, state, token, cfg, moe_dispatch=moe_dispatch)
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

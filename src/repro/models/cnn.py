@@ -1,0 +1,257 @@
+"""The paper's own CNNs — VGG-11, MobileNetV3-Small, SqueezeNet 1.1 — in
+pure JAX (NHWC, ``lax.conv_general_dilated``).
+
+BatchNorm is applied in batch-statistics mode (no running averages): every
+peer normalizes with its own batch moments, which matches what the paper's
+per-peer PyTorch training does during the measured training stages.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = Dict[str, Any]
+
+
+def _conv_init(key, kh, kw, cin, cout, dtype=jnp.float32):
+    fan_in = kh * kw * cin
+    w = jax.random.normal(key, (kh, kw, cin, cout)) * math.sqrt(2.0 / fan_in)
+    return {"w": w.astype(dtype), "b": jnp.zeros((cout,), dtype)}
+
+
+def conv2d(p: Params, x, stride=1, padding="SAME", groups=1):
+    y = lax.conv_general_dilated(
+        x, p["w"],
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+    return y + p["b"]
+
+
+def _bn_init(c, dtype=jnp.float32):
+    return {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+
+
+def batchnorm(p: Params, x, eps=1e-5):
+    mu = x.mean(axis=(0, 1, 2), keepdims=True)
+    var = x.var(axis=(0, 1, 2), keepdims=True)
+    return (x - mu) * lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+def max_pool(x, window=2, stride=2):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, window, window, 1), (1, stride, stride, 1), "VALID"
+    )
+
+
+def avg_pool_to(x, out_hw: int):
+    h = x.shape[1]
+    if h == out_hw:
+        return x
+    win = max(h // out_hw, 1)
+    return lax.reduce_window(
+        x, 0.0, lax.add, (1, win, win, 1), (1, win, win, 1), "VALID"
+    ) / (win * win)
+
+
+def _linear_init(key, din, dout, dtype=jnp.float32):
+    w = jax.random.normal(key, (din, dout)) * math.sqrt(2.0 / din)
+    return {"w": w.astype(dtype), "b": jnp.zeros((dout,), dtype)}
+
+
+def linear(p, x):
+    return x @ p["w"] + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# VGG-11
+# ---------------------------------------------------------------------------
+
+_VGG11_PLAN = [64, "M", 128, "M", 256, 256, "M", 512, 512, "M", 512, 512, "M"]
+
+
+def init_vgg11(key, cfg) -> Params:
+    ks = iter(jax.random.split(key, 16))
+    cin = cfg.image_channels
+    convs: List[Params] = []
+    for item in _VGG11_PLAN:
+        if item == "M":
+            continue
+        convs.append(_conv_init(next(ks), 3, 3, cin, item))
+        cin = item
+    pool_hw = 7 if cfg.image_size >= 64 else 1
+    flat = 512 * pool_hw * pool_hw
+    return {
+        "convs": convs,
+        "fc1": _linear_init(next(ks), flat, 4096),
+        "fc2": _linear_init(next(ks), 4096, 4096),
+        "fc3": _linear_init(next(ks), 4096, cfg.num_classes),
+    }
+
+
+def vgg11_forward(params: Params, images: jnp.ndarray, cfg) -> jnp.ndarray:
+    x = images
+    ci = 0
+    for item in _VGG11_PLAN:
+        if item == "M":
+            x = max_pool(x)
+        else:
+            x = jax.nn.relu(conv2d(params["convs"][ci], x))
+            ci += 1
+    x = avg_pool_to(x, 7 if cfg.image_size >= 64 else 1)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(linear(params["fc1"], x))
+    x = jax.nn.relu(linear(params["fc2"], x))
+    return linear(params["fc3"], x)
+
+
+# ---------------------------------------------------------------------------
+# SqueezeNet 1.1
+# ---------------------------------------------------------------------------
+
+# (squeeze, expand1x1, expand3x3)
+_FIRE_PLAN = [
+    (16, 64, 64), (16, 64, 64),
+    (32, 128, 128), (32, 128, 128),
+    (48, 192, 192), (48, 192, 192), (64, 256, 256), (64, 256, 256),
+]
+_FIRE_POOL_AFTER = {1, 3}  # maxpool after these fire indices (v1.1)
+
+
+def init_squeezenet(key, cfg) -> Params:
+    ks = iter(jax.random.split(key, 4 + 3 * len(_FIRE_PLAN)))
+    p: Params = {"stem": _conv_init(next(ks), 3, 3, cfg.image_channels, 64)}
+    cin = 64
+    fires = []
+    for (s, e1, e3) in _FIRE_PLAN:
+        fires.append(
+            {
+                "squeeze": _conv_init(next(ks), 1, 1, cin, s),
+                "e1": _conv_init(next(ks), 1, 1, s, e1),
+                "e3": _conv_init(next(ks), 3, 3, s, e3),
+            }
+        )
+        cin = e1 + e3
+    p["fires"] = fires
+    p["head"] = _conv_init(next(ks), 1, 1, cin, cfg.num_classes)
+    return p
+
+
+def squeezenet_forward(params: Params, images: jnp.ndarray, cfg) -> jnp.ndarray:
+    small = cfg.image_size < 64
+    x = jax.nn.relu(conv2d(params["stem"], images, stride=1 if small else 2))
+    if not small:
+        x = max_pool(x, 3, 2)
+    for i, f in enumerate(params["fires"]):
+        s = jax.nn.relu(conv2d(f["squeeze"], x))
+        x = jnp.concatenate(
+            [jax.nn.relu(conv2d(f["e1"], s)), jax.nn.relu(conv2d(f["e3"], s))], axis=-1
+        )
+        if i in _FIRE_POOL_AFTER:
+            x = max_pool(x, 3, 2)
+    x = jax.nn.relu(conv2d(params["head"], x))
+    return x.mean(axis=(1, 2))  # global average pool -> logits
+
+
+# ---------------------------------------------------------------------------
+# MobileNetV3-Small
+# ---------------------------------------------------------------------------
+
+# (kernel, exp, out, SE, activation, stride)
+_MBV3_PLAN = [
+    (3, 16, 16, True, "relu", 2),
+    (3, 72, 24, False, "relu", 2),
+    (3, 88, 24, False, "relu", 1),
+    (5, 96, 40, True, "hswish", 2),
+    (5, 240, 40, True, "hswish", 1),
+    (5, 240, 40, True, "hswish", 1),
+    (5, 120, 48, True, "hswish", 1),
+    (5, 144, 48, True, "hswish", 1),
+    (5, 288, 96, True, "hswish", 2),
+    (5, 576, 96, True, "hswish", 1),
+    (5, 576, 96, True, "hswish", 1),
+]
+
+
+def _act(x, kind):
+    return jax.nn.relu(x) if kind == "relu" else x * jax.nn.relu6(x + 3) / 6
+
+
+def init_mobilenet_v3_small(key, cfg) -> Params:
+    ks = iter(jax.random.split(key, 8 + 8 * len(_MBV3_PLAN)))
+    p: Params = {
+        "stem": _conv_init(next(ks), 3, 3, cfg.image_channels, 16),
+        "stem_bn": _bn_init(16),
+    }
+    cin = 16
+    blocks = []
+    for (k, exp, out, se, actk, stride) in _MBV3_PLAN:
+        b: Params = {
+            "expand": _conv_init(next(ks), 1, 1, cin, exp),
+            "expand_bn": _bn_init(exp),
+            "dw": _conv_init(next(ks), k, k, 1, exp),
+            "dw_bn": _bn_init(exp),
+            "project": _conv_init(next(ks), 1, 1, exp, out),
+            "project_bn": _bn_init(out),
+        }
+        if se:
+            sq = max(exp // 4, 8)
+            b["se_fc1"] = _conv_init(next(ks), 1, 1, exp, sq)
+            b["se_fc2"] = _conv_init(next(ks), 1, 1, sq, exp)
+        blocks.append(b)
+        cin = out
+    p["blocks"] = blocks
+    p["head_conv"] = _conv_init(next(ks), 1, 1, cin, 576)
+    p["head_bn"] = _bn_init(576)
+    p["fc1"] = _linear_init(next(ks), 576, 1024)
+    p["fc2"] = _linear_init(next(ks), 1024, cfg.num_classes)
+    return p
+
+
+def mobilenet_v3_small_forward(params: Params, images: jnp.ndarray, cfg) -> jnp.ndarray:
+    small = cfg.image_size < 64
+    x = conv2d(params["stem"], images, stride=1 if small else 2)
+    x = _act(batchnorm(params["stem_bn"], x), "hswish")
+    for b, (k, exp, out, se, actk, stride) in zip(params["blocks"], _MBV3_PLAN):
+        if small and x.shape[1] <= 4:
+            stride = 1  # don't collapse tiny feature maps below 4x4
+        inp = x
+        h = _act(batchnorm(b["expand_bn"], conv2d(b["expand"], x)), actk)
+        h = conv2d(b["dw"], h, stride=stride, groups=h.shape[-1])
+        h = _act(batchnorm(b["dw_bn"], h), actk)
+        if "se_fc1" in b:
+            s = h.mean(axis=(1, 2), keepdims=True)
+            s = jax.nn.relu(conv2d(b["se_fc1"], s))
+            s = jax.nn.sigmoid(conv2d(b["se_fc2"], s))
+            h = h * s
+        h = batchnorm(b["project_bn"], conv2d(b["project"], h))
+        x = h + inp if (stride == 1 and inp.shape[-1] == h.shape[-1]) else h
+    x = _act(batchnorm(params["head_bn"], conv2d(params["head_conv"], x)), "hswish")
+    x = x.mean(axis=(1, 2))
+    x = _act(linear(params["fc1"], x), "hswish")
+    return linear(params["fc2"], x)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+CNN_ZOO = {
+    "vgg11": (init_vgg11, vgg11_forward),
+    "squeezenet1_1": (init_squeezenet, squeezenet_forward),
+    "mobilenet_v3_small": (init_mobilenet_v3_small, mobilenet_v3_small_forward),
+}
+
+
+def init_cnn(key, cfg) -> Params:
+    return CNN_ZOO[cfg.cnn_variant][0](key, cfg)
+
+
+def cnn_forward(params: Params, images: jnp.ndarray, cfg) -> jnp.ndarray:
+    return CNN_ZOO[cfg.cnn_variant][1](params, images, cfg)

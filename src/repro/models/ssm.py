@@ -1,0 +1,247 @@
+"""Mamba2 (SSD — state-space duality) blocks, pure JAX.
+
+Training/prefill uses the chunked SSD algorithm (arXiv:2405.21060 §6):
+intra-chunk attention-like dual form + inter-chunk state recurrence, which
+maps onto MXU-shaped matmuls. Decode uses the O(1) recurrent step.
+
+The chunked core here is also the reference ("ref") semantics for the
+Pallas kernel in ``repro/kernels/ssd_scan.py``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import Params, _dense_init, init_rmsnorm, rmsnorm, shard
+
+
+def init_mamba2(key, cfg) -> Params:
+    d = cfg.d_model
+    di = cfg.d_inner
+    H, N, G = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_ngroups
+    conv_ch = di + 2 * G * N
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        # order: [z (di), x (di), B (G*N), C (G*N), dt (H)]
+        "in_proj": _dense_init(ks[0], d, 2 * di + 2 * G * N + H, pdt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch)) * 0.1).astype(pdt),
+        "conv_b": jnp.zeros((conv_ch,), pdt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(pdt),
+        "D": jnp.ones((H,), pdt),
+        "dt_bias": jnp.zeros((H,), pdt),
+        "norm": init_rmsnorm(di, pdt),
+        "out_proj": _dense_init(ks[2], di, d, pdt),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d. x: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H) (post-softplus)
+    A: jnp.ndarray,  # (H,) negative decay rates
+    Bm: jnp.ndarray,  # (B, S, G, N)
+    Cm: jnp.ndarray,  # (B, S, G, N)
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, Pd = x.shape
+    G = Bm.shape[2]
+    rep = H // G
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, nc, chunk, H, Pd).astype(f32)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(f32)
+    Bc = Bm.reshape(Bsz, nc, chunk, G, N := Bm.shape[-1]).astype(f32)
+    Cc = Cm.reshape(Bsz, nc, chunk, G, N).astype(f32)
+
+    a = dtc * A.astype(f32)  # (B,nc,Q,H) log-decay per step
+    cum = jnp.cumsum(a, axis=2)  # inclusive cumsum within chunk
+    # intra-chunk "attention" matrix L[i,j] = exp(cum_i - cum_j) for i >= j.
+    # Mask BEFORE the exp: the upper triangle has diff > 0 and exp would
+    # overflow there — harmless forward (where() discards it) but the
+    # overflowed branch poisons the backward pass with inf * 0 = NaN.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    L = jnp.exp(jnp.where(causal, diff, -jnp.inf))
+
+    # weight each source step j by dt_j (discretized input)
+    xdt = xc * dtc[..., None]  # (B,nc,Q,H,P)
+
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (B,nc,Q,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    # diagonal (intra-chunk) term
+    scores = jnp.einsum("bnqhk,bnshk->bnqsh", Ch, Bh) * L  # (B,nc,Q,Q,H)
+    y_diag = jnp.einsum("bnqsh,bnshp->bnqhp", scores, xdt)
+
+    # per-chunk end states: S_n = sum_j exp(cum_last - cum_j) B_j x_j dt_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (B,nc,Q,H)
+    states = jnp.einsum("bnqhk,bnqh,bnqhp->bnhpk", Bh, decay_to_end, xdt)
+
+    # inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # (B,nc,H)
+
+    def scan_fn(R, inp):
+        s_n, g_n = inp  # (B,H,P,N), (B,H)
+        R_out = R  # state *entering* this chunk
+        R_next = R * g_n[..., None, None] + s_n
+        return R_next, R_out
+
+    R0 = (
+        init_state.astype(f32)
+        if init_state is not None
+        else jnp.zeros((Bsz, H, Pd, N), f32)
+    )
+    states_t = states.swapaxes(0, 1)  # (nc, B, H, P, N)
+    decay_t = chunk_decay.swapaxes(0, 1)  # (nc, B, H)
+    final, entering = lax.scan(scan_fn, R0, (states_t, decay_t))
+    entering = entering.swapaxes(0, 1)  # (B, nc, H, P, N)
+
+    # off-diagonal contribution: C_i · (exp(cum_i) * R_entering)
+    decay_from_start = jnp.exp(cum)  # (B,nc,Q,H)
+    y_off = jnp.einsum(
+        "bnqhk,bnhpk,bnqh->bnqhp", Ch, entering, decay_from_start
+    )
+
+    y = (y_diag + y_off).reshape(Bsz, Sp, H, Pd)[:, :S]
+    return y, final
+
+
+def ssd_decode_step(
+    x: jnp.ndarray,  # (B, H, P)
+    dt: jnp.ndarray,  # (B, H)
+    A: jnp.ndarray,  # (H,)
+    Bm: jnp.ndarray,  # (B, G, N)
+    Cm: jnp.ndarray,  # (B, G, N)
+    state: jnp.ndarray,  # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    f32 = jnp.float32
+    H = x.shape[1]
+    G = Bm.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(f32)  # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(f32)
+    decay = jnp.exp(dt.astype(f32) * A.astype(f32))  # (B,H)
+    upd = jnp.einsum("bhp,bhk->bhpk", x.astype(f32) * dt.astype(f32)[..., None], Bh)
+    new_state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpk,bhk->bhp", new_state, Ch)
+    return y, new_state
+
+
+def mamba2_apply(
+    params: Params,
+    x: jnp.ndarray,  # (B, S, d)
+    cfg,
+    *,
+    state: Optional[Params] = None,  # decode: {"ssm": (B,H,P,N), "conv": (B,K-1,C)}
+    use_kernel: bool = False,
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    B, S, d = x.shape
+    di, H, N, G = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_ngroups
+    Pd = cfg.ssm_headdim
+    dt_ = x.dtype
+
+    proj = x @ params["in_proj"].astype(dt_)
+    z, xs, Bm, Cm, dt_raw = jnp.split(
+        proj, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1
+    )
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)  # (B,S,conv_ch)
+
+    if state is None or S > 1:
+        # full-sequence path; with `state` given this is a PREFILL: the
+        # chunked scan's final SSM state + the conv tail fill the decode state.
+        conv_out = _causal_conv(
+            conv_in, params["conv_w"].astype(dt_), params["conv_b"].astype(dt_)
+        )
+        conv_out = jax.nn.silu(conv_out)
+        xs, Bm, Cm = jnp.split(conv_out, [di, di + G * N], axis=-1)
+        xs = shard(xs.reshape(B, S, H, Pd), "batch", None, "heads", None)
+        Bm = Bm.reshape(B, S, G, N)
+        Cm = Cm.reshape(B, S, G, N)
+        dtv = jax.nn.softplus(
+            dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+        )
+        A = -jnp.exp(params["A_log"].astype(jnp.float32))
+        if use_kernel and state is None:
+            from repro.kernels import ops as kops
+
+            y, final = kops.ssd_scan(xs, dtv, A, Bm, Cm, chunk=cfg.ssm_chunk)
+        else:
+            y, final = ssd_chunked(xs, dtv, A, Bm, Cm, cfg.ssm_chunk)
+        y = y + xs.astype(jnp.float32) * params["D"].astype(jnp.float32)[:, None]
+        y = y.reshape(B, S, di).astype(dt_)
+        new_state = None
+        if state is not None:
+            K = cfg.ssm_conv
+            tail = conv_in[:, -(K - 1):] if S >= K - 1 else jnp.concatenate(
+                [state["conv"][:, S:], conv_in], axis=1
+            )
+            new_state = {
+                "ssm": final.astype(state["ssm"].dtype),
+                "conv": tail.astype(state["conv"].dtype),
+            }
+    else:
+        # single-token decode
+        assert S == 1
+        K = cfg.ssm_conv
+        conv_buf = jnp.concatenate(
+            [state["conv"], conv_in.astype(state["conv"].dtype)], axis=1
+        )  # (B, K, C)
+        w = params["conv_w"].astype(dt_)
+        conv_out = (conv_buf.astype(dt_) * w[None]).sum(axis=1) + params[
+            "conv_b"
+        ].astype(dt_)
+        conv_out = jax.nn.silu(conv_out)  # (B, C)
+        xs1, Bm1, Cm1 = jnp.split(conv_out, [di, di + G * N], axis=-1)
+        xs1 = xs1.reshape(B, H, Pd)
+        Bm1 = Bm1.reshape(B, G, N)
+        Cm1 = Cm1.reshape(B, G, N)
+        dtv = jax.nn.softplus(
+            dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+        )  # (B,H)
+        A = -jnp.exp(params["A_log"].astype(jnp.float32))
+        y1, ssm_new = ssd_decode_step(xs1, dtv, A, Bm1, Cm1, state["ssm"].astype(jnp.float32))
+        y1 = y1 + xs1.astype(jnp.float32) * params["D"].astype(jnp.float32)[:, None]
+        y = y1.reshape(B, 1, di).astype(dt_)
+        new_state = {
+            "ssm": ssm_new.astype(state["ssm"].dtype),
+            "conv": conv_buf[:, 1:],
+        }
+
+    # gated RMSNorm then output projection
+    y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dt_)
+    return shard(out, "batch", "seq", "embed"), new_state
+
+
+def init_mamba2_state(cfg, batch: int, dtype) -> Params:
+    di, H, N, G = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_ngroups
+    conv_ch = di + 2 * G * N
+    return {
+        "ssm": jnp.zeros((batch, H, cfg.ssm_headdim, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }

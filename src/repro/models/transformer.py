@@ -1,0 +1,543 @@
+"""Unified decoder LM covering dense / MoE / SSM / hybrid / VLM families,
+plus the Whisper-style encoder-decoder.
+
+Layers are grouped by the smallest period of the per-layer block pattern and
+stacked so the model body is a ``lax.scan`` over layer groups — this keeps
+HLO size (and 512-device GSPMD partitioning time) independent of depth.
+Weight-tied blocks (zamba2's shared attention) live outside the stack and
+are closed over by the scan body.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import BlockSpec, ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.layers import Params, shard
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig, spec: BlockSpec, *, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    pdt = jnp.dtype(cfg.param_dtype)
+    p: Params = {"ln1": L.init_rmsnorm(cfg.d_model, pdt)}
+    if spec.mixer == "mamba":
+        p["mixer"] = S.init_mamba2(ks[0], cfg)
+    elif spec.mixer in ("attn", "attn_local"):
+        p["mixer"] = L.init_attention(ks[0], cfg)
+    elif spec.mixer == "shared_attn":
+        pass  # weights live in the shared block
+    else:
+        raise ValueError(spec.mixer)
+    if spec.ffn == "dense":
+        p["ln2"] = L.init_rmsnorm(cfg.d_model, pdt)
+        p["ffn"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, pdt)
+    elif spec.ffn == "moe":
+        p["ln2"] = L.init_rmsnorm(cfg.d_model, pdt)
+        p["ffn"] = L.init_moe(ks[1], cfg)
+    if cross:
+        p["ln_cross"] = L.init_rmsnorm(cfg.d_model, pdt)
+        p["cross"] = L.init_attention(ks[2], cfg, cross=True)
+    return p
+
+
+def _block_apply(
+    params: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    spec: BlockSpec,
+    *,
+    positions: jnp.ndarray,
+    cache: Optional[Params] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+    shared: Optional[Params] = None,
+    cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    causal: bool = True,
+    moe_dispatch: str = "dense",
+    use_ssd_kernel: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[Params]]:
+    """Returns (x, aux_loss, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = None
+
+    if spec.mixer == "shared_attn":
+        # zamba2: a full weight-tied attn+MLP block
+        h = L.rmsnorm(shared["ln1"], x, cfg.norm_eps)
+        att, new_attn_cache = L.attention_apply(
+            shared["mixer"], h, cfg,
+            positions=positions, causal=causal, window=0,
+            cache=None if cache is None else cache,
+            cache_pos=cache_pos,
+        )
+        x = x + att
+        h = L.rmsnorm(shared["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(shared["ffn"], h, cfg.act)
+        return x, aux, new_attn_cache
+
+    h = L.rmsnorm(params["ln1"], x, cfg.norm_eps)
+    if spec.mixer == "mamba":
+        y, new_cache = S.mamba2_apply(
+            params["mixer"], h, cfg, state=cache, use_kernel=use_ssd_kernel
+        )
+    else:
+        window = cfg.sliding_window if spec.mixer == "attn_local" else (
+            cfg.serve_window if (cache is not None and cfg.serve_window and cfg.sliding_window == 0) else 0
+        )
+        y, new_cache = L.attention_apply(
+            params["mixer"], h, cfg,
+            positions=positions, causal=causal, window=window,
+            cache=cache, cache_pos=cache_pos,
+        )
+    x = x + y
+
+    if cross_kv is not None and "cross" in params:
+        h = L.rmsnorm(params["ln_cross"], x, cfg.norm_eps)
+        y, _ = L.attention_apply(
+            params["cross"], h, cfg, positions=positions, cross_kv=cross_kv
+        )
+        x = x + y
+
+    if spec.ffn == "dense":
+        h = L.rmsnorm(params["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp_apply(params["ffn"], h, cfg.act)
+    elif spec.ffn == "moe":
+        h = L.rmsnorm(params["ln2"], x, cfg.norm_eps)
+        y, aux = L.moe_apply(params["ffn"], h, cfg, dispatch=moe_dispatch)
+        x = x + y
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Periodic layer grouping
+# ---------------------------------------------------------------------------
+
+
+def layer_grouping(cfg: ModelConfig) -> Tuple[Tuple[BlockSpec, ...], int, int]:
+    """Return (period_specs, n_groups, n_remainder)."""
+    specs = cfg.block_specs()
+    Lnum = len(specs)
+    for p in range(1, Lnum + 1):
+        if Lnum % p and (Lnum // p) * p + (Lnum % p) != Lnum:
+            continue
+        n = Lnum // p
+        if n == 0:
+            continue
+        ok = all(specs[i] == specs[i % p] for i in range(n * p))
+        if ok and n >= 1:
+            return specs[:p], n, Lnum - n * p
+    return specs, 1, 0
+
+
+def _stack(trees: List[Params]) -> Params:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only LM (dense / moe / ssm / hybrid / vlm)
+# ---------------------------------------------------------------------------
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    specs = cfg.block_specs()
+    period, n_groups, rem = layer_grouping(cfg)
+    P_len = len(period)
+    ks = jax.random.split(key, 6)
+    pdt = jnp.dtype(cfg.param_dtype)
+
+    params: Params = {
+        "embed": (jax.random.normal(ks[0], (cfg.padded_vocab, cfg.d_model)) * 0.02).astype(pdt),
+        "final_norm": L.init_rmsnorm(cfg.d_model, pdt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L._dense_init(ks[1], cfg.d_model, cfg.padded_vocab, pdt)
+
+    if any(s.mixer == "shared_attn" for s in specs):
+        sk = jax.random.split(ks[2], 3)
+        params["shared_block"] = {
+            "ln1": L.init_rmsnorm(cfg.d_model, pdt),
+            "mixer": L.init_attention(sk[0], cfg),
+            "ln2": L.init_rmsnorm(cfg.d_model, pdt),
+            "ffn": L.init_mlp(sk[1], cfg.d_model, cfg.d_ff, pdt),
+        }
+    if cfg.vision_tokens:
+        params["projector"] = L._dense_init(ks[3], cfg.d_model, cfg.d_model, pdt)
+
+    layer_keys = jax.random.split(ks[4], len(specs))
+    stacks = []
+    for j, spec in enumerate(period):
+        group_params = [
+            _init_block(layer_keys[g * P_len + j], cfg, spec) for g in range(n_groups)
+        ]
+        stacks.append(_stack(group_params))
+    params["stack"] = stacks
+    params["tail"] = [
+        _init_block(layer_keys[n_groups * P_len + r], cfg, specs[n_groups * P_len + r])
+        for r in range(rem)
+    ]
+    return params
+
+
+def _run_stack(
+    params: Params,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    positions: jnp.ndarray,
+    caches: Optional[List[Params]] = None,  # one stacked cache per period slot
+    tail_caches: Optional[List[Params]] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+    cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    causal: bool = True,
+    moe_dispatch: str = "dense",
+    use_ssd_kernel: bool = False,
+):
+    period, n_groups, rem = layer_grouping(cfg)
+    shared = params.get("shared_block")
+    specs = cfg.block_specs()
+
+    def group_body(carry, xs):
+        h, aux = carry
+        stacked_params, stacked_caches = xs
+        new_caches = []
+        for j, spec in enumerate(period):
+            cache_j = None if stacked_caches is None else stacked_caches[j]
+            h, a, nc = _block_apply(
+                stacked_params[j], h, cfg, spec,
+                positions=positions, cache=cache_j, cache_pos=cache_pos,
+                shared=shared, cross_kv=cross_kv, causal=causal,
+                moe_dispatch=moe_dispatch, use_ssd_kernel=use_ssd_kernel,
+            )
+            new_caches.append(nc)
+        if stacked_caches is None:
+            return (h, aux + a), None
+        return (h, aux + a), new_caches
+
+    body = group_body
+    if cfg.remat and caches is None:
+        body = jax.checkpoint(group_body)
+
+    xs = (params["stack"], caches)
+    (x, aux), new_caches = lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+
+    new_tail = []
+    for r, tp in enumerate(params["tail"]):
+        spec = specs[n_groups * len(period) + r]
+        tc = None if tail_caches is None else tail_caches[r]
+        x, a, nc = _block_apply(
+            tp, x, cfg, spec,
+            positions=positions, cache=tc, cache_pos=cache_pos,
+            shared=shared, cross_kv=cross_kv, causal=causal,
+            moe_dispatch=moe_dispatch, use_ssd_kernel=use_ssd_kernel,
+        )
+        aux = aux + a
+        new_tail.append(nc)
+    return x, aux, new_caches, new_tail
+
+
+def _unembed(params: Params, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].astype(dt).T
+    else:
+        logits = x @ params["unembed"].astype(dt)
+    if cfg.padded_vocab != cfg.vocab_size:
+        logits = logits[..., : cfg.vocab_size]
+    logits = L.softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return shard(logits, "batch", None, "vocab")
+
+
+def lm_forward(
+    params: Params,
+    tokens: jnp.ndarray,  # (B, S)
+    cfg: ModelConfig,
+    *,
+    patches: Optional[jnp.ndarray] = None,  # VLM stub embeddings (B, V, d)
+    moe_dispatch: str = "dense",
+    use_ssd_kernel: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward (train / prefill). Returns (logits, aux)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.vision_tokens and patches is not None:
+        pe = patches.astype(dt) @ params["projector"].astype(dt)
+        x = jnp.concatenate([pe, x], axis=1)
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.arange(x.shape[1])
+    x, aux, _, _ = _run_stack(
+        params, x, cfg, positions=positions,
+        moe_dispatch=moe_dispatch, use_ssd_kernel=use_ssd_kernel,
+    )
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.vision_tokens and patches is not None:
+        x = x[:, patches.shape[1]:]
+    return _unembed(params, x, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# Decode state (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int) -> Params:
+    """KV caches / SSM states for every layer, grouped like the param stack."""
+    period, n_groups, rem = layer_grouping(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    specs = cfg.block_specs()
+
+    def one(spec: BlockSpec) -> Params:
+        if spec.mixer == "mamba":
+            return S.init_mamba2_state(cfg, batch, dt)
+        window = cfg.sliding_window if spec.mixer == "attn_local" else cfg.serve_window
+        return L.init_decode_cache(cfg, batch, seq_len, window, dt)
+
+    stacked = [
+        jax.tree.map(lambda *xs: jnp.stack(xs), *[one(spec) for _ in range(n_groups)])
+        if n_groups > 1
+        else jax.tree.map(lambda x: x[None], one(spec))
+        for spec in period
+    ]
+    tail = [one(specs[n_groups * len(period) + r]) for r in range(rem)]
+    return {"pos": jnp.zeros((), jnp.int32), "layers": stacked, "tail": tail}
+
+
+def lm_prefill(
+    params: Params,
+    state: Params,
+    tokens: jnp.ndarray,  # (B, S) the full prompt
+    cfg: ModelConfig,
+    *,
+    patches: Optional[jnp.ndarray] = None,
+    moe_dispatch: str = "dense",
+) -> Tuple[jnp.ndarray, Params]:
+    """One-shot prefill: runs the prompt through the stack, filling every
+    layer's KV cache / SSM state. Returns (last-token logits, state ready
+    for decode at position S)."""
+    dt = jnp.dtype(cfg.dtype)
+    B, S = tokens.shape
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.vision_tokens and patches is not None:
+        pe = patches.astype(dt) @ params["projector"].astype(dt)
+        x = jnp.concatenate([pe, x], axis=1)
+    x = shard(x, "batch", "seq", "embed")
+    total = x.shape[1]
+    positions = jnp.arange(total)
+    x, _, new_caches, new_tail = _run_stack(
+        params, x, cfg,
+        positions=positions,
+        caches=state["layers"], tail_caches=state["tail"],
+        cache_pos=jnp.zeros((), jnp.int32),
+        moe_dispatch=moe_dispatch,
+    )
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _unembed(params, x[:, -1:], cfg)[:, 0]
+    return logits, {
+        "pos": jnp.asarray(total, jnp.int32),
+        "layers": new_caches,
+        "tail": new_tail,
+    }
+
+
+def lm_decode_step(
+    params: Params,
+    state: Params,
+    token: jnp.ndarray,  # (B, 1)
+    cfg: ModelConfig,
+    *,
+    moe_dispatch: str = "dense",
+) -> Tuple[jnp.ndarray, Params]:
+    """One decode step: returns (logits (B, vocab), new_state)."""
+    dt = jnp.dtype(cfg.dtype)
+    pos = state["pos"]
+    x = params["embed"].astype(dt)[token]
+    x = shard(x, "batch", "seq", "embed")
+    positions = pos[None]
+    x, _, new_caches, new_tail = _run_stack(
+        params, x, cfg,
+        positions=positions,
+        caches=state["layers"], tail_caches=state["tail"], cache_pos=pos,
+        moe_dispatch=moe_dispatch,
+    )
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _unembed(params, x, cfg)[:, 0]
+    return logits, {"pos": pos + 1, "layers": new_caches, "tail": new_tail}
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (whisper)
+# ---------------------------------------------------------------------------
+
+
+def _sinusoidal(positions: jnp.ndarray, d: int) -> jnp.ndarray:
+    half = d // 2
+    freqs = jnp.exp(-math.log(10_000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[:, None].astype(jnp.float32) * freqs[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def init_encdec(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    pdt = jnp.dtype(cfg.param_dtype)
+    spec = BlockSpec("attn", "dense")
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embed": (jax.random.normal(ks[2], (cfg.padded_vocab, cfg.d_model)) * 0.02).astype(pdt),
+        "encoder": _stack([_init_block(k, cfg, spec) for k in enc_keys]),
+        "decoder": _stack([_init_block(k, cfg, spec, cross=True) for k in dec_keys]),
+        "enc_norm": L.init_rmsnorm(cfg.d_model, pdt),
+        "final_norm": L.init_rmsnorm(cfg.d_model, pdt),
+        "unembed": L._dense_init(ks[3], cfg.d_model, cfg.padded_vocab, pdt),
+    }
+
+
+def encode(params: Params, frames: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """frames: (B, enc_seq, d) stubbed conv-frontend output."""
+    dt = jnp.dtype(cfg.dtype)
+    Senc = frames.shape[1]
+    x = frames.astype(dt) + _sinusoidal(jnp.arange(Senc), cfg.d_model).astype(dt)
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.arange(Senc)
+    spec = BlockSpec("attn", "dense")
+
+    def body(h, p):
+        h, _, _ = _block_apply(p, h, cfg, spec, positions=positions, causal=False)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, params["encoder"])
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _cross_kv(block_params: Params, enc_out: jnp.ndarray, cfg: ModelConfig):
+    B, Senc, _ = enc_out.shape
+    hd, K = cfg.resolved_head_dim, cfg.num_kv_heads
+    dt = enc_out.dtype
+    k = (enc_out @ block_params["cross"]["wk"].astype(dt)).reshape(B, Senc, K, hd)
+    v = (enc_out @ block_params["cross"]["wv"].astype(dt)).reshape(B, Senc, K, hd)
+    return k, v
+
+
+def encdec_forward(
+    params: Params,
+    frames: jnp.ndarray,  # (B, enc_seq, d)
+    tokens: jnp.ndarray,  # (B, S)
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    dt = jnp.dtype(cfg.dtype)
+    enc_out = encode(params, frames, cfg)
+    B, Sdec = tokens.shape
+    x = params["embed"].astype(dt)[tokens]
+    x = x + _sinusoidal(jnp.arange(Sdec), cfg.d_model).astype(dt)
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.arange(Sdec)
+    spec = BlockSpec("attn", "dense")
+
+    def body(h, p):
+        ckv = _cross_kv(p, enc_out, cfg)
+        h, _, _ = _block_apply(
+            p, h, cfg, spec, positions=positions, cross_kv=ckv, causal=True
+        )
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(body, x, params["decoder"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ params["unembed"].astype(dt))[..., : cfg.vocab_size]
+    return logits.astype(jnp.float32), jnp.zeros((), jnp.float32)
+
+
+def init_encdec_state(cfg: ModelConfig, batch: int, seq_len: int, frames=None, params=None) -> Params:
+    """Decoder self-attn caches + precomputed cross K/V."""
+    dt = jnp.dtype(cfg.dtype)
+    hd, K = cfg.resolved_head_dim, cfg.num_kv_heads
+    Lnum = cfg.num_layers
+    caches = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[L.init_decode_cache(cfg, batch, seq_len, 0, dt) for _ in range(Lnum)],
+    )
+    cross = {
+        "k": jnp.zeros((Lnum, batch, cfg.encoder_seq, K, hd), dt),
+        "v": jnp.zeros((Lnum, batch, cfg.encoder_seq, K, hd), dt),
+    }
+    return {"pos": jnp.zeros((), jnp.int32), "self": caches, "cross": cross}
+
+
+def encdec_prefill(
+    params: Params,
+    state: Params,
+    frames: jnp.ndarray,  # (B, enc_seq, d)
+    tokens: jnp.ndarray,  # (B, S) decoder prompt
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Params]:
+    """Encode once, precompute per-layer cross K/V, prefill decoder caches."""
+    dt = jnp.dtype(cfg.dtype)
+    enc_out = encode(params, frames, cfg)
+    B, S = tokens.shape
+    x = params["embed"].astype(dt)[tokens]
+    x = x + _sinusoidal(jnp.arange(S), cfg.d_model).astype(dt)
+    positions = jnp.arange(S)
+    spec = BlockSpec("attn", "dense")
+
+    def body(carry, xs):
+        h = carry
+        p, cache = xs
+        ck, cv = _cross_kv(p, enc_out, cfg)
+        h, _, nc = _block_apply(
+            p, h, cfg, spec,
+            positions=positions, cache=cache,
+            cache_pos=jnp.zeros((), jnp.int32),
+            cross_kv=(ck, cv), causal=True,
+        )
+        return h, (nc, ck, cv)
+
+    x, (new_caches, cks, cvs) = lax.scan(body, x, (params["decoder"], state["self"]))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ params["unembed"].astype(dt)).astype(jnp.float32)[:, -1, : cfg.vocab_size]
+    return logits, {
+        "pos": jnp.asarray(S, jnp.int32),
+        "self": new_caches,
+        "cross": {"k": cks, "v": cvs},
+    }
+
+
+def encdec_decode_step(
+    params: Params,
+    state: Params,
+    token: jnp.ndarray,  # (B, 1)
+    cfg: ModelConfig,
+) -> Tuple[jnp.ndarray, Params]:
+    dt = jnp.dtype(cfg.dtype)
+    pos = state["pos"]
+    B = token.shape[0]
+    x = params["embed"].astype(dt)[token]
+    x = x + _sinusoidal(pos[None], cfg.d_model).astype(dt)
+    positions = pos[None]
+    spec = BlockSpec("attn", "dense")
+
+    def body(carry, xs):
+        h = carry
+        p, cache, ck, cv = xs
+        h, _, nc = _block_apply(
+            p, h, cfg, spec,
+            positions=positions, cache=cache, cache_pos=pos,
+            cross_kv=(ck, cv), causal=True,
+        )
+        return h, nc
+
+    x, new_caches = lax.scan(
+        body, x, (params["decoder"], state["self"], state["cross"]["k"], state["cross"]["v"])
+    )
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ params["unembed"].astype(dt)).astype(jnp.float32)[:, 0, : cfg.vocab_size]
+    return logits, {"pos": pos + 1, "self": new_caches, "cross": state["cross"]}

@@ -1,0 +1,107 @@
+"""Minimal optimizer library (optax is not available offline).
+
+An :class:`Optimizer` is a pair of pure functions:
+  init(params)                         -> opt_state
+  update(grads, opt_state, params, lr) -> (updates, opt_state)
+``updates`` are *descent* directions: apply with ``apply_updates``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    name: str = "optimizer"
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) - u.astype(jnp.float32)).astype(p.dtype),
+        params,
+        updates,
+    )
+
+
+def sgd(momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, state, params, lr):
+        if momentum == 0.0:
+            return jax.tree.map(lambda g: lr * g.astype(jnp.float32), grads), state
+        new_m = jax.tree.map(
+            lambda m, g: momentum * m + g.astype(jnp.float32), state, grads
+        )
+        if nesterov:
+            upd = jax.tree.map(
+                lambda m, g: lr * (momentum * m + g.astype(jnp.float32)), new_m, grads
+            )
+        else:
+            upd = jax.tree.map(lambda m: lr * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update, f"sgd(m={momentum})")
+
+
+def adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {
+            "mu": jax.tree.map(z, params),
+            "nu": jax.tree.map(z, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["mu"], grads
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"],
+            grads,
+        )
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda m, v: lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu
+        )
+        return upd, {"mu": mu, "nu": nu, "t": t}
+
+    return Optimizer(init, update, "adam")
+
+
+def adamw(
+    b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.01
+) -> Optimizer:
+    base = adam(b1, b2, eps)
+
+    def update(grads, state, params, lr):
+        upd, state2 = base.update(grads, state, params, lr)
+        upd = jax.tree.map(
+            lambda u, p: u + lr * weight_decay * p.astype(jnp.float32), upd, params
+        )
+        return upd, state2
+
+    return Optimizer(base.init, update, "adamw")

@@ -1,0 +1,8 @@
+from repro.train.steps import (
+    lm_loss,
+    build_train_step,
+    build_serve_step,
+    init_train_state,
+)
+
+__all__ = ["lm_loss", "build_train_step", "build_serve_step", "init_train_state"]

@@ -1,0 +1,69 @@
+"""Checkpointing: pytree <-> npz with path-flattened keys + JSON metadata.
+
+Works for params, optimizer states and mailbox buffers; sharded arrays are
+fully gathered before save (fine at the scales we train on CPU; the dry-run
+scale never checkpoints).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree: Any, *, step: int = 0, extra: Optional[dict] = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    meta = {"step": step, "treedef": _treedef_repr(tree), **(extra or {})}
+    with open(_meta_path(path), "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str, like: Any) -> Tuple[Any, dict]:
+    """Restore into the structure of ``like`` (shapes/dtypes must match)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(npz.files)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = [
+        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]
+    ]
+    new_leaves = []
+    for key, leaf in zip(keys, leaves_like):
+        arr = npz[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    meta = {}
+    mp = _meta_path(path)
+    if os.path.exists(mp):
+        with open(mp) as f:
+            meta = json.load(f)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), meta
+
+
+def _meta_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".meta.json"
+
+
+def _treedef_repr(tree) -> str:
+    return re.sub(r"\s+", " ", str(jax.tree_util.tree_structure(tree)))[:2000]

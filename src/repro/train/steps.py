@@ -1,0 +1,81 @@
+"""Train/serve step builders tying models + optimizers + the P2P core."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import models
+from repro.configs.base import ModelConfig
+from repro.core.p2p import Topology, build_p2p_train_step
+from repro.optim import Optimizer
+
+
+def lm_loss(
+    params,
+    batch: Dict[str, jnp.ndarray],
+    cfg: ModelConfig,
+    *,
+    moe_dispatch: str = "dense",
+    use_ssd_kernel: bool = False,
+    z_loss: float = 1e-4,
+):
+    """Next-token cross-entropy (+ router aux + z-loss). Returns (loss, aux)."""
+    logits, aux = models.forward(
+        params, batch, cfg, moe_dispatch=moe_dispatch, use_ssd_kernel=use_ssd_kernel
+    )
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (lse - gold).mean()
+    loss = ce
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse).mean()
+    if cfg.num_experts:
+        loss = loss + cfg.router_aux_coef * aux
+    return loss, ce
+
+
+def init_train_state(
+    key: jax.Array, cfg: ModelConfig, optimizer: Optimizer
+) -> Dict[str, Any]:
+    params = models.init_model(key, cfg)
+    return {
+        "params": params,
+        "opt_state": optimizer.init(params),
+        "step": jnp.zeros((), jnp.int32),
+        "key": jax.random.fold_in(key, 1),
+    }
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    topo: Topology,
+    mesh,
+    schedule: Callable,
+    *,
+    moe_dispatch: str = "dense",
+    use_ssd_kernel: bool = False,
+):
+    loss_fn = partial(
+        lm_loss, cfg=cfg, moe_dispatch=moe_dispatch, use_ssd_kernel=use_ssd_kernel
+    )
+    return build_p2p_train_step(
+        lambda p, b: loss_fn(p, b), optimizer, topo, mesh, schedule
+    )
+
+
+def build_serve_step(cfg: ModelConfig, *, moe_dispatch: str = "dense"):
+    """serve_step(params, state, token) -> (logits, new_state)."""
+
+    def serve_step(params, state, token):
+        return models.decode_step(
+            params, state, token, cfg, moe_dispatch=moe_dispatch
+        )
+
+    return serve_step

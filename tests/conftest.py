@@ -1,0 +1,15 @@
+import os
+import sys
+
+# NOTE: deliberately NO XLA_FLAGS device-count override here — smoke tests
+# and benchmarks must see the real (single) device. Only launch/dryrun.py
+# forces 512 placeholder devices, in its own process.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

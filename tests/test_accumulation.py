@@ -1,0 +1,62 @@
+"""Gradient accumulation (Topology.accum_steps) must match the single-shot
+step exactly (same total batch, fp32 accumulation), and the Lambda timeout
+cap must be enforced."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.p2p import Topology
+from repro.core.serverless import LAMBDA_TIMEOUT_S, ServerlessExecutor
+from repro.optim import sgd
+from repro.optim.schedules import constant
+from repro.train import build_train_step, init_train_state
+
+
+def test_accumulation_matches_single_shot():
+    cfg = reduced(get_config("qwen2.5-3b"), num_layers=2, d_model=64, vocab_size=64,
+                  remat=False)
+    opt = sgd(momentum=0.0)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0, 64),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (8, 16), 0, 64),
+    }
+    state0 = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+
+    outs = {}
+    for n in (1, 4):
+        topo = Topology(peer_axes=(), lambda_axis=None, serverless=False,
+                        accum_steps=n)
+        step = jax.jit(build_train_step(cfg, opt, topo, None, constant(1e-2)))
+        s, m = step(state0, batch)
+        outs[n] = (s["params"], float(m["loss"]))
+
+    # micro-round mean of per-round means == global mean (equal splits)
+    assert outs[1][1] == pytest.approx(outs[4][1], rel=1e-5)
+    # bf16 compute: micro-round reduction order differs from the fused batch
+    for a, b in zip(jax.tree.leaves(outs[1][0]), jax.tree.leaves(outs[4][0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-4)
+
+
+def test_lambda_timeout_enforced():
+    import time
+
+    ex = ServerlessExecutor(backend="serverless")
+    # tiny model -> low-memory, slow lambda; fake a measured batch that would
+    # exceed the 15-minute cap after the speed scaling
+    slow = LAMBDA_TIMEOUT_S * 0.6  # /0.43 speed -> >15 min on the lambda
+
+    class FakeThunk:
+        def __call__(self):
+            return jnp.zeros(())
+
+    real_pc = time.perf_counter
+    ticks = iter([0.0, slow])
+    time.perf_counter = lambda: next(ticks, slow)
+    try:
+        with pytest.raises(ValueError, match="exceeds"):
+            ex.run([FakeThunk()], model_bytes=int(1e6), batch_bytes=int(1e5),
+                   combine=lambda xs: xs[0])
+    finally:
+        time.perf_counter = real_pc

@@ -1,0 +1,82 @@
+"""QSGD property tests (hypothesis): unbiasedness, bounded error, roundtrip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    s=st.sampled_from([1, 3, 15, 127]),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_roundtrip_shape_and_error_bound(n, s, scale):
+    """|Q(v)_i - v_i| <= ||bucket|| / s element-wise (quantization grid)."""
+    cfg = C.QSGDConfig(levels=s, bucket=128)
+    key = jax.random.PRNGKey(n)
+    x = jax.random.normal(key, (n,)) * scale
+    payload = C.quantize(x, jax.random.PRNGKey(1), cfg)
+    xh = C.dequantize(payload, cfg)
+    assert xh.shape == x.shape
+    buckets, _ = C._pad_to_buckets(x, cfg.bucket)
+    norms = jnp.linalg.norm(buckets, axis=-1)
+    bound = float(norms.max()) / s + 1e-6
+    assert float(jnp.abs(xh - x).max()) <= bound
+
+
+def test_unbiasedness():
+    """E[Q(v)] == v (the core QSGD property)."""
+    cfg = C.QSGDConfig(levels=7, bucket=128)
+    x = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    acc = jnp.zeros_like(x)
+    trials = 600
+    for i in range(trials):
+        payload = C.quantize(x, jax.random.PRNGKey(100 + i), cfg)
+        acc = acc + C.dequantize(payload, cfg)
+    mean = acc / trials
+    # std of the mean ~ (||x||/s)/sqrt(trials); allow 5 sigma
+    sigma = float(jnp.linalg.norm(x)) / 7 / np.sqrt(trials)
+    assert float(jnp.abs(mean - x).max()) < 5 * sigma
+
+
+def test_sign_preserved():
+    cfg = C.QSGDConfig(levels=127, bucket=128)
+    x = jnp.asarray(np.linspace(-4, 4, 256), jnp.float32)
+    payload = C.quantize(x, jax.random.PRNGKey(2), cfg)
+    xh = C.dequantize(payload, cfg)
+    nz = np.abs(np.asarray(xh)) > 0
+    assert np.all(np.sign(np.asarray(xh))[nz] == np.sign(np.asarray(x))[nz])
+
+
+def test_tree_roundtrip_and_wire_size():
+    cfg = C.QSGDConfig(levels=127, bucket=256)
+    tree = {
+        "a": jax.random.normal(jax.random.PRNGKey(0), (37, 19)),
+        "b": {"c": jax.random.normal(jax.random.PRNGKey(1), (512,))},
+    }
+    payload, _ = C.quantize_tree(tree, jax.random.PRNGKey(3), cfg)
+    back = C.dequantize_tree(payload, cfg)
+    for k, v in jax.tree.leaves_with_path(tree):
+        pass
+    flat_in = jax.tree.leaves(tree)
+    flat_out = jax.tree.leaves(back)
+    assert all(a.shape == b.shape for a, b in zip(flat_in, flat_out))
+    wire = C.payload_bytes(payload)
+    raw = C.raw_bytes(tree)
+    assert wire < raw / 3  # ~8+ bits/elt vs 32
+    rel = max(
+        float(jnp.abs(a - b).max() / (jnp.abs(a).max() + 1e-9))
+        for a, b in zip(flat_in, flat_out)
+    )
+    assert rel < 0.2
+
+
+@settings(max_examples=10, deadline=None)
+@given(bucket=st.sampled_from([128, 512, 2048]))
+def test_bits_per_element(bucket):
+    cfg = C.QSGDConfig(levels=127, bucket=bucket)
+    assert cfg.bits_per_element == pytest.approx(8 + 32 / bucket)

@@ -1,0 +1,204 @@
+"""Mailbox, convergence detection, cost model, serverless planner tests."""
+import numpy as np
+import pytest
+
+from repro.core.convergence import ConvergenceDetector, EarlyStopping, ReduceLROnPlateau
+from repro.core.cost import (
+    InstanceCost,
+    ServerlessCost,
+    ec2_cost_per_second,
+    lambda_cost_per_second,
+    paper_table2_row,
+    paper_table3_row,
+)
+from repro.core.mailbox import HostMailbox, MESSAGE_CAP_BYTES
+from repro.core.serverless import (
+    LAMBDA_MAX_MEMORY_MB,
+    ServerlessExecutor,
+    ServerlessPlanner,
+)
+
+
+# ---------------------------------------------------------------------------
+# Mailbox (RabbitMQ semantics)
+# ---------------------------------------------------------------------------
+
+def test_mailbox_latest_wins():
+    mb = HostMailbox(2)
+    mb.publish(0, "g1", nbytes=10, time=1.0, epoch=0)
+    mb.publish(0, "g2", nbytes=10, time=2.0, epoch=0)
+    assert mb.consume(0).payload == "g2"  # replaced, not queued
+
+
+def test_mailbox_read_does_not_delete():
+    mb = HostMailbox(2)
+    mb.publish(1, "g", nbytes=10, time=0.0, epoch=0)
+    assert mb.consume(1).payload == "g"
+    assert mb.consume(1).payload == "g"
+
+
+def test_mailbox_async_visibility():
+    mb = HostMailbox(2)
+    mb.publish(0, "late", nbytes=10, time=5.0, epoch=0)
+    assert mb.consume(0, at_time=4.0) is None  # not yet visible
+    assert mb.consume(0, at_time=6.0).payload == "late"
+
+
+def test_mailbox_s3_indirection_for_large_messages():
+    mb = HostMailbox(1)
+    mb.publish(0, "big", nbytes=MESSAGE_CAP_BYTES + 1, time=0.0, epoch=0)
+    msg = mb.consume(0)
+    assert msg.via_s3 and msg.s3_uuid is not None
+    assert mb.stats["s3_indirections"] == 1
+
+
+def test_mailbox_barrier():
+    mb = HostMailbox(3)
+    for p in range(3):
+        assert not mb.barrier_complete(0)
+        mb.barrier_signal(p, 0)
+    assert mb.barrier_complete(0)
+    mb.barrier_reset(0)
+    assert not mb.barrier_complete(0)
+
+
+# ---------------------------------------------------------------------------
+# Convergence detection
+# ---------------------------------------------------------------------------
+
+def test_plateau_reduces_lr():
+    p = ReduceLROnPlateau(0.1, patience=1, factor=0.5)
+    p.step(1.0)
+    p.step(1.0)  # bad 1
+    lr = p.step(1.0)  # bad 2 > patience -> reduce
+    assert lr == pytest.approx(0.05)
+
+
+def test_plateau_respects_min_lr():
+    p = ReduceLROnPlateau(1e-6, patience=0, factor=0.5, min_lr=1e-6)
+    p.step(1.0)
+    assert p.step(1.0) == pytest.approx(1e-6)
+
+
+def test_early_stopping():
+    e = EarlyStopping(patience=2)
+    assert not e.step(1.0)
+    assert not e.step(1.0)
+    assert e.step(1.0)
+
+
+def test_early_stopping_resets_on_improvement():
+    e = EarlyStopping(patience=2, min_delta=0.0)
+    e.step(1.0)
+    e.step(1.0)
+    e.step(0.5)  # improvement resets
+    assert not e.stopped
+    e.step(0.6)
+    assert e.step(0.7)
+
+
+def test_detector_epoch_limit():
+    d = ConvergenceDetector(0.1, mode="max", max_epochs=3, stop_patience=100)
+    assert not d.step(0.1)
+    assert not d.step(0.2)
+    assert d.step(0.3)  # epoch limit
+
+
+# ---------------------------------------------------------------------------
+# Cost model: reproduce the paper's Tables II & III
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "batch,paper_lambda_cost,paper_total",
+    [
+        (1024, 0.0000573, 0.03567),
+        (512, 0.0000362, 0.03069),
+        (128, 0.0000233, 0.03451),
+        (64, 0.0000220, 0.05435),
+    ],
+)
+def test_paper_table2_serverless_costs(batch, paper_lambda_cost, paper_total):
+    row = paper_table2_row(batch)
+    assert lambda_cost_per_second(row["lambda_memory_mb"]) == pytest.approx(
+        paper_lambda_cost, rel=0.02
+    )
+    cost = ServerlessCost(
+        compute_time_s=row["compute_time_s"],
+        num_batches=row["num_batches"],
+        lambda_memory_mb=row["lambda_memory_mb"],
+        instance="t2.small",
+    ).cost_per_peer
+    # rel=0.04: the paper's own batch-128 row is ~3.5% off its formula (1)
+    # — (2.33e-5*118 + 6.39e-6)*12.9 = 0.03555, printed as 0.03451.
+    assert cost == pytest.approx(paper_total, rel=0.04)
+
+
+@pytest.mark.parametrize(
+    "batch,paper_total",
+    [(1024, 0.00665), (512, 0.00717), (128, 0.00851), (64, 0.01017)],
+)
+def test_paper_table3_instance_costs(batch, paper_total):
+    row = paper_table3_row(batch)
+    cost = InstanceCost(row["compute_time_s"], "t2.large").cost_per_peer
+    assert cost == pytest.approx(paper_total, rel=0.02)
+
+
+def test_paper_cost_ratio_5x():
+    """Headline claim: serverless ~5.34x the instance cost at batch 1024."""
+    s = ServerlessCost(41.2, 15, 4400, "t2.small").cost_per_peer
+    i = InstanceCost(258.0, "t2.large").cost_per_peer
+    assert s / i == pytest.approx(5.34, rel=0.05)
+
+
+def test_ec2_rates_match_paper():
+    assert ec2_cost_per_second("t2.small") == pytest.approx(0.00000639, rel=0.01)
+    assert ec2_cost_per_second("t2.large") == pytest.approx(0.00002578, rel=0.01)
+
+
+# ---------------------------------------------------------------------------
+# Serverless planner / executor
+# ---------------------------------------------------------------------------
+
+def test_planner_memory_monotonic_in_model_size():
+    p = ServerlessPlanner()
+    m1 = p.lambda_memory_mb(int(5e6), int(1e6))
+    m2 = p.lambda_memory_mb(int(5e8), int(1e6))
+    assert m2 > m1
+    assert m1 % 64 == 0
+
+
+def test_planner_rejects_oversized_workloads():
+    p = ServerlessPlanner()
+    with pytest.raises(ValueError):
+        p.lambda_memory_mb(int(20e9), int(1e6))  # > 10GB Lambda cap
+
+
+def test_planner_state_machine_plan():
+    p = ServerlessPlanner()
+    plan = p.plan(model_bytes=int(1e8), batch_bytes=int(1e6), num_batches=7)
+    assert plan.num_branches == 7
+    asl = plan.asl_sketch()
+    assert asl["States"]["ParallelGradients"]["MaxConcurrency"] == 7
+
+
+def test_executor_accounting_parallel_vs_sequential():
+    import time
+
+    def slow():
+        time.sleep(0.02)
+        return 1.0
+
+    thunks = [slow] * 5
+    seq = ServerlessExecutor(backend="instance")
+    _, rs = seq.run(thunks, model_bytes=int(4e9), batch_bytes=int(1e6),
+                    combine=lambda xs: sum(xs))
+    par = ServerlessExecutor(
+        backend="serverless", invoke_overhead_s=0.0, orchestration_overhead_s=0.0
+    )
+    _, rp = par.run(thunks, model_bytes=int(4e9), batch_bytes=int(1e6),
+                    combine=lambda xs: sum(xs))
+    # the 4e9-byte model forces a high-memory (multi-vCPU) lambda: parallel
+    # wall time must be well under the sequential sum
+    assert rp.wall_time_s < rs.wall_time_s / 2
+    assert rp.lambda_memory_mb > 4000
+    assert rs.cost_usd > 0 and rp.cost_usd > 0

@@ -1,0 +1,143 @@
+"""Data pipeline + optimizer tests (incl. hypothesis invariants)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import BatchKey, DataLoader, Partitioner, make_dataset
+from repro.optim import adam, adamw, apply_updates, clip_by_global_norm, global_norm, sgd
+from repro.optim.schedules import constant, cosine, warmup_cosine
+
+
+# ---------------------------------------------------------------------------
+# Partitioner invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(num_peers=st.integers(1, 12), size=st.integers(12, 500))
+def test_partitions_disjoint_cover(num_peers, size):
+    ds = make_dataset("mnist", size=size)
+    part = Partitioner(ds, num_peers)
+    seen = set()
+    for p in range(num_peers):
+        idx = part.partition(p)
+        s = set(int(i) for i in idx)
+        assert not (seen & s), "partitions overlap"
+        seen |= s
+    per = size // num_peers
+    assert len(seen) == per * num_peers  # exhaustive up to remainder
+
+
+def test_partition_out_of_range():
+    ds = make_dataset("mnist", size=100)
+    part = Partitioner(ds, 4)
+    with pytest.raises(IndexError):
+        part.partition(4)
+
+
+# ---------------------------------------------------------------------------
+# Batch addressing determinism (the S3-key analogue)
+# ---------------------------------------------------------------------------
+
+def test_batches_deterministic_by_key():
+    ds = make_dataset("cifar", size=256, image_hw=8)
+    part = Partitioner(ds, 2)
+    dl = DataLoader(part, 0, 16)
+    k = BatchKey(0, 3, 1)
+    b1, b2 = dl.load(k), dl.load(k)
+    np.testing.assert_array_equal(b1["images"], b2["images"])
+    np.testing.assert_array_equal(b1["labels"], b2["labels"])
+    assert "peer=0" in k.s3_key("cifar") and "epoch=3" in k.s3_key("cifar")
+
+
+def test_batches_differ_across_epochs_and_batches():
+    ds = make_dataset("mnist", size=256, image_hw=8)
+    dl = DataLoader(Partitioner(ds, 2), 0, 16)
+    a = dl.load(BatchKey(0, 0, 0))["images"]
+    b = dl.load(BatchKey(0, 1, 0))["images"]
+    assert not np.array_equal(a, b)
+
+
+def test_lm_dataset_shapes():
+    ds = make_dataset("lm", size=64, vocab_size=128, seq_len=32)
+    dl = DataLoader(Partitioner(ds, 2), 1, 8)
+    b = dl.load(BatchKey(1, 0, 0))
+    assert b["tokens"].shape == (8, 32) and b["labels"].shape == (8, 32)
+    assert b["tokens"].max() < 128
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_image_labels_balanced_enough():
+    ds = make_dataset("mnist", size=1000, image_hw=8)
+    dl = DataLoader(Partitioner(ds, 1), 0, 500)
+    labels = dl.load(BatchKey(0, 0, 0))["labels"]
+    counts = np.bincount(labels, minlength=10)
+    assert counts.min() > 10  # all classes present
+
+
+# ---------------------------------------------------------------------------
+# Optimizers vs numpy references
+# ---------------------------------------------------------------------------
+
+def test_sgd_momentum_matches_numpy():
+    opt = sgd(momentum=0.9)
+    p = {"w": jnp.asarray([1.0, 2.0])}
+    s = opt.init(p)
+    g = {"w": jnp.asarray([0.1, -0.2])}
+    lr = jnp.float32(0.5)
+    m = np.zeros(2)
+    w = np.array([1.0, 2.0])
+    for _ in range(3):
+        upd, s = opt.update(g, s, p, lr)
+        p = apply_updates(p, upd)
+        m = 0.9 * m + np.array([0.1, -0.2])
+        w = w - 0.5 * m
+    np.testing.assert_allclose(np.asarray(p["w"]), w, rtol=1e-6)
+
+
+def test_adam_matches_numpy():
+    opt = adam(b1=0.9, b2=0.999, eps=1e-8)
+    p = {"w": jnp.asarray([1.0, -1.0])}
+    s = opt.init(p)
+    g = {"w": jnp.asarray([0.3, 0.7])}
+    w = np.array([1.0, -1.0])
+    mu = np.zeros(2)
+    nu = np.zeros(2)
+    for t in range(1, 4):
+        upd, s = opt.update(g, s, p, jnp.float32(0.1))
+        p = apply_updates(p, upd)
+        gg = np.array([0.3, 0.7])
+        mu = 0.9 * mu + 0.1 * gg
+        nu = 0.999 * nu + 0.001 * gg**2
+        w = w - 0.1 * (mu / (1 - 0.9**t)) / (np.sqrt(nu / (1 - 0.999**t)) + 1e-8)
+    np.testing.assert_allclose(np.asarray(p["w"]), w, rtol=1e-5)
+
+
+def test_adamw_decays_weights():
+    p = {"w": jnp.asarray([10.0])}
+    opt = adamw(weight_decay=0.1)
+    s = opt.init(p)
+    upd, s = opt.update({"w": jnp.asarray([0.0])}, s, p, jnp.float32(0.1))
+    p2 = apply_updates(p, upd)
+    assert float(p2["w"][0]) < 10.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(0.1, 100.0))
+def test_clip_by_global_norm(scale):
+    tree = {"a": jnp.ones((4,)) * scale, "b": jnp.ones((3,)) * scale}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(global_norm(clipped)) <= 1.0 + 1e-5
+    assert float(norm) == pytest.approx(scale * np.sqrt(7), rel=1e-5)
+
+
+def test_schedules():
+    assert float(constant(0.1)(1000)) == pytest.approx(0.1)
+    c = cosine(1.0, 100, final_frac=0.1)
+    assert float(c(0)) == pytest.approx(1.0)
+    assert float(c(100)) == pytest.approx(0.1, abs=1e-6)
+    w = warmup_cosine(1.0, 10, 110)
+    assert float(w(5)) == pytest.approx(0.5)
+    assert float(w(10)) == pytest.approx(1.0)

@@ -1,0 +1,110 @@
+"""Per-architecture smoke tests: a REDUCED same-family variant runs one
+forward and one train step on CPU; output shapes and finiteness asserted.
+
+The FULL configs are exercised only via launch/dryrun.py (no allocation).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import models
+from repro.configs import ASSIGNED_ARCHS, PAPER_ARCHS, get_config, reduced
+from repro.core.p2p import Topology
+from repro.optim import sgd
+from repro.optim.schedules import constant
+from repro.train import build_train_step, init_train_state
+
+B, S = 2, 16
+
+
+def _batch(cfg, with_labels=True):
+    key = jax.random.PRNGKey(7)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if with_labels:
+        batch["labels"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(key, (B, cfg.vision_tokens, cfg.d_model))
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_smoke(arch):
+    cfg = reduced(get_config(arch))
+    params = models.init_model(jax.random.PRNGKey(0), cfg)
+    logits, aux = models.forward(params, _batch(cfg, with_labels=False), cfg)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_step_smoke(arch):
+    cfg = reduced(get_config(arch))
+    opt = sgd(momentum=0.9)
+    topo = Topology(peer_axes=(), lambda_axis=None, serverless=False)
+    step = build_train_step(cfg, opt, topo, mesh=None, schedule=constant(1e-2))
+    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    batch = _batch(cfg)
+    state2, metrics = jax.jit(step)(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(state2["step"]) == 1
+    # params actually changed
+    diffs = jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()), state["params"], state2["params"]
+    )
+    assert max(jax.tree.leaves(diffs)) > 0
+
+
+@pytest.mark.parametrize(
+    "arch",
+    [a for a in ASSIGNED_ARCHS if get_config(a).family != "cnn"],
+)
+def test_decode_smoke(arch):
+    cfg = reduced(get_config(arch))
+    params = models.init_model(jax.random.PRNGKey(0), cfg)
+    state = models.init_decode_state(cfg, B, 32)
+    tok = jnp.ones((B, 1), jnp.int32)
+    logits, state = models.decode_step(params, state, tok, cfg)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert int(state["pos"]) == 1
+
+
+@pytest.mark.parametrize("arch", PAPER_ARCHS)
+def test_cnn_smoke(arch):
+    cfg = get_config(arch)
+    params = models.init_model(jax.random.PRNGKey(0), cfg)
+    imgs = jax.random.normal(jax.random.PRNGKey(1), (B, 32, 32, 3))
+    logits, _ = models.forward(params, {"images": imgs}, cfg)
+    assert logits.shape == (B, cfg.num_classes)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_param_counts_are_plausible():
+    """Analytic param counts should be in the right ballpark for the
+    full-size configs (catches config transcription errors)."""
+    expected = {
+        "mamba2-370m": (0.25e9, 0.6e9),
+        "qwen2.5-3b": (2.0e9, 4.5e9),
+        "gemma2-2b": (1.5e9, 3.5e9),
+        "dbrx-132b": (90e9, 160e9),
+        "starcoder2-3b": (2.0e9, 4.5e9),
+        "internvl2-26b": (18e9, 32e9),
+        "zamba2-1.2b": (0.8e9, 2.0e9),
+        "granite-moe-3b-a800m": (2.0e9, 4.5e9),
+        # sheet-literal dims (48L x 64e x d_ff 1408) give 28.9B total;
+        # the "16B" in the name is not reproducible from the given dims —
+        # we implement the sheet as specified (see DESIGN.md).
+        "moonshot-v1-16b-a3b": (10e9, 32e9),
+        "whisper-base": (0.03e9, 0.13e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n:.3e} outside [{lo:.1e}, {hi:.1e}]"
+
+
+def test_active_params_moe():
+    cfg = get_config("dbrx-132b")
+    assert cfg.active_param_count() < cfg.param_count() / 2
