@@ -19,6 +19,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core import QSGDConfig, quantize_tree, dequantize_tree
 from repro.core.compression import payload_bytes, raw_bytes
+from repro.core.cost import CommCost
+from repro.core.exchange import ExchangeContext, available_exchanges, get_exchange
 from repro import models
 
 from benchmarks.common import record
@@ -71,6 +73,16 @@ def run(quick: bool = True):
         "fig5/claim:compression_reduces_comm", 0.0,
         f"comm_speedup={comm_speedup:.2f}x;paper=Fig5_reduction;holds={comm_speedup > 2}",
     )
+    # Registry sweep: every registered protocol's publish-side wire bytes
+    # (the numbers core/cost.py's CommCost consumes), same model gradients.
+    ctx = ExchangeContext(num_peers=PEERS, qsgd=qcfg, topk_frac=0.01)
+    for name in available_exchanges():
+        wb = get_exchange(name).wire_bytes(grads, ctx)
+        cc = CommCost(wire_bytes_per_step=wb, bandwidth_bps=BANDWIDTH)
+        record(
+            f"fig5/wire/{name}", cc.seconds_per_step * 1e6,
+            f"bytes={wb};ratio_vs_raw={raw/max(wb,1):.2f}",
+        )
     return comm_raw, comm_qsgd
 
 

@@ -32,6 +32,7 @@ def run(quick: bool = True):
             batches_per_epoch=3,
             optimizer=sgd(momentum=0.9), lr=0.02,
             sync=(mode == "sync"),
+            exchange="allgather_mean",  # Algorithm 1 wire format, via registry
             peer_speeds=None if mode == "sync" else [1.0, 1.0, 4.0, 8.0],
         )
         hist = cl.run(epochs)

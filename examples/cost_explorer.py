@@ -11,12 +11,14 @@ import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.cost import (
+    CommCost,
     InstanceCost,
     ServerlessCost,
     TPUCost,
     paper_table2_row,
     paper_table3_row,
 )
+from repro.core.exchange import ExchangeContext, available_exchanges, get_exchange
 from repro.core.serverless import ServerlessPlanner
 
 
@@ -40,6 +42,21 @@ def main():
         mem = planner.lambda_memory_mb(int(mb * 1e6), int(4e6))
         print(f"model {mb:>5} MB  ->  lambda {mem:>6} MB "
               f"({mem/1769:.2f} vCPU)")
+
+    print("\n=== Exchange wire cost: VGG11-sized gradient, 4 peers, 1 Gb/s ===")
+    import jax
+    import jax.numpy as jnp
+
+    # shapes only — byte accounting never materializes the gradient
+    grads_like = {"vgg11": jax.ShapeDtypeStruct((132_863_336,), jnp.float32)}
+    ctx = ExchangeContext(num_peers=4, topk_frac=0.01)
+    for name in available_exchanges():
+        cc = CommCost(
+            wire_bytes_per_step=get_exchange(name).wire_bytes(grads_like, ctx),
+            bandwidth_bps=1e9, usd_per_gb_egress=0.09,  # AWS inter-AZ-ish
+        )
+        print(f"{name:16s} {cc.wire_bytes_per_step/1e6:>8.1f} MB/step "
+              f"{cc.seconds_per_step:>7.2f} s/step  ${cc.usd_per_step:.4f}/step egress")
 
     print("\n=== TPU equivalent: cost/step of the serverless-P2P train step ===")
     # Using the roofline collective-bound estimate for qwen2.5-3b train_4k:

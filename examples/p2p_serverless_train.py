@@ -18,9 +18,11 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import get_config
 from repro.core.compression import QSGDConfig
 from repro.core.convergence import ConvergenceDetector
+from repro.core.exchange import available_exchanges
 from repro.core.p2p import Topology
 from repro.data import BatchKey, DataLoader, Partitioner, make_dataset
 from repro.launch.mesh import make_host_mesh
@@ -29,8 +31,7 @@ from repro.configs.base import ShapeConfig
 from repro.models.layers import axis_rules
 from repro.optim import adam
 from repro.optim.schedules import warmup_cosine
-from repro.train import build_train_step, init_train_state
-from repro.train import checkpoint as ckpt
+from repro.train import P2PTrainer
 
 
 def hundred_m_config():
@@ -49,7 +50,7 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--exchange", default="qsgd",
-                    choices=["allgather_mean", "psum_mean", "qsgd"])
+                    choices=list(available_exchanges()))
     ap.add_argument("--checkpoint", default="/tmp/p2p_lm_ckpt")
     args = ap.parse_args()
 
@@ -66,11 +67,13 @@ def main():
     )
     opt = adam()
     sched = warmup_cosine(1e-3, 20, args.steps)
-    step = jax.jit(build_train_step(cfg, opt, topo, mesh, sched))
-    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
-    nparams = sum(x.size for x in jax.tree.leaves(state["params"]))
+    trainer = P2PTrainer(cfg, opt, topo, mesh, sched)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    nparams = sum(x.size for x in jax.tree.leaves(state.params))
     print(f"model: {cfg.name} ({nparams/1e6:.1f}M params), "
           f"peers={npeers}, exchange={args.exchange}")
+    if topo.peer_axes:
+        print(f"wire: {trainer.comm_cost(state.params).summary()}")
 
     ds = make_dataset("lm", size=100_000, vocab_size=cfg.vocab_size, seq_len=args.seq)
     loader = DataLoader(Partitioner(ds, 1), 0, args.batch)
@@ -79,12 +82,12 @@ def main():
 
     rules = activation_rules(cfg, ShapeConfig("ex", args.seq, args.batch, "train"), mesh)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         with axis_rules(rules):
             for i in range(args.steps):
                 b = loader.load(BatchKey(0, i // loader.num_batches, i % loader.num_batches))
                 batch = {"tokens": jnp.asarray(b["tokens"]), "labels": jnp.asarray(b["labels"])}
-                state, m = step(state, batch)
+                state, m = trainer.step(state, batch)
                 if (i + 1) % 20 == 0 or i == 0:
                     ce = float(m["aux"])
                     dt = (time.time() - t0) / (i + 1)
@@ -94,7 +97,7 @@ def main():
                     if detector.step(ce):
                         print("converged — early stop")
                         break
-    ckpt.save(args.checkpoint, state["params"], step=int(state["step"]))
+    trainer.save(args.checkpoint, state)
     print(f"checkpoint saved: {args.checkpoint}.npz")
 
 

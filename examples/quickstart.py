@@ -27,8 +27,10 @@ def main():
         optimizer=sgd(momentum=0.9),
         lr=0.05,
         sync=True,  # RabbitMQ barrier semantics
+        exchange="allgather_mean",  # any name in repro.core.available_exchanges()
         executor=ServerlessExecutor(backend="serverless"),  # Lambda fan-out
     )
+    print(f"exchange={cluster.protocol.name}: {cluster.comm_cost().summary()}")
     history = cluster.run(epochs=3)
 
     print("\n=== training history ===")

@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Tier-1 verify + fast smoke subset.
+#
+#   bash scripts/check.sh          # full tier-1 suite, then smoke
+#   bash scripts/check.sh --fast   # smoke only (registry + cost math, <1 min)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+smoke() {
+  echo "== smoke: exchange registry =="
+  python -c "
+from repro.core.exchange import available_exchanges, get_exchange, ExchangeContext
+import jax.numpy as jnp
+g = {'w': jnp.zeros((64, 64))}
+for n in available_exchanges():
+    print(f'  {n}: {get_exchange(n).wire_bytes(g, ExchangeContext(num_peers=4))} B/peer/step')
+"
+  echo "== smoke: paper cost tables (Tables II/III) =="
+  python -m benchmarks.run --only table2_3
+}
+
+if [[ "${1:-}" == "--fast" ]]; then
+  smoke
+  exit 0
+fi
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+smoke
+echo "ALL CHECKS PASSED"

@@ -1,0 +1,126 @@
+"""JAX version compatibility layer.
+
+The code targets the unified-mesh API (``jax.shard_map`` / ``jax.set_mesh``
+/ ``jax.sharding.AxisType``); this container ships an older JAX where those
+live under different names (``jax.experimental.shard_map``, the ``Mesh``
+context manager) or don't exist at all (``AxisType``). Everything that
+touches mesh/axis state goes through this module so the rest of the code
+is version-agnostic:
+
+    from repro import compat
+    mesh = compat.make_mesh((4, 2), ("data", "model"),
+                            axis_types=(compat.AxisType.Auto,) * 2)
+    with compat.set_mesh(mesh):
+        fn = compat.shard_map(body, mesh=mesh, in_specs=..., out_specs=...,
+                              axis_names={"data"}, check_vma=False)
+
+On old JAX, ``shard_map(axis_names=...)`` maps to the experimental
+``auto=`` complement and records the manual axes in a context variable so
+:func:`auto_axes` (used by the logical-sharding layer) still knows which
+mesh axes GSPMD owns inside the manual region.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+from contextvars import ContextVar
+from typing import Any, Optional, Sequence
+
+import jax
+
+try:  # new API (jax >= 0.5.x)
+    from jax.sharding import AxisType  # type: ignore
+
+    _HAS_AXIS_TYPE = True
+except ImportError:  # old API
+    _HAS_AXIS_TYPE = False
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+_HAS_NEW_SHARD_MAP = hasattr(jax, "shard_map")
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+
+# Old-API bookkeeping: the *auto* (GSPMD-owned) axes of the innermost
+# compat-shard_map region, set while its body traces.
+_AUTO_AXES: ContextVar[Optional[frozenset]] = ContextVar("auto_axes", default=None)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              axis_types: Optional[Sequence[Any]] = None, devices=None):
+    """``jax.make_mesh`` that tolerates old versions without ``axis_types``."""
+    kw = {} if devices is None else {"devices": devices}
+    if _HAS_AXIS_TYPE and axis_types is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names, axis_types=tuple(axis_types), **kw)
+        except TypeError:  # AxisType exists but make_mesh predates the kwarg
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """``jax.set_mesh`` context; falls back to the ``Mesh`` context manager."""
+    if _HAS_SET_MESH:
+        with jax.set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check_vma=False):
+    """``jax.shard_map`` (manual over ``axis_names``) on any JAX version.
+
+    Old JAX expresses "manual over axis_names" as the complement
+    ``auto=`` set and calls the replication check ``check_rep``.
+    """
+    manual = frozenset(axis_names) if axis_names else frozenset(mesh.axis_names)
+    if _HAS_NEW_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                             axis_names=manual, check_vma=check_vma)
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    # Old XLA CHECK-fails on control flow (lax.scan) inside a *partial*-auto
+    # shard_map region, so the fallback runs full-manual: the would-be auto
+    # axes replicate the per-peer compute instead of GSPMD-partitioning it.
+    # Numerics are identical; only the intra-peer fan-out optimization is
+    # lost (host meshes default those axes to size 1 anyway).
+    auto: frozenset = frozenset()
+
+    def wrapped(*args):
+        token = _AUTO_AXES.set(auto)
+        try:
+            return f(*args)
+        finally:
+            _AUTO_AXES.reset(token)
+
+    return _shard_map(wrapped, mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=bool(check_vma))
+
+
+def auto_axes() -> Optional[frozenset]:
+    """Mesh axes currently owned by GSPMD (Auto), or None if unknown.
+
+    New API: read the abstract mesh's axis types. Old API: inside a compat
+    ``shard_map`` the auto set recorded at trace time; elsewhere None
+    (every axis behaves as auto, so callers skip filtering).
+    """
+    if _HAS_AXIS_TYPE:
+        try:
+            am = jax.sharding.get_abstract_mesh()
+        except Exception:
+            return _AUTO_AXES.get()
+        if am is None or not am.axis_names:
+            return _AUTO_AXES.get()
+        try:
+            return frozenset(
+                n for n, t in zip(am.axis_names, am.axis_types) if t == AxisType.Auto
+            )
+        except Exception:
+            return frozenset(am.axis_names)
+    return _AUTO_AXES.get()

@@ -1,7 +1,17 @@
 """Core: the paper's contribution — serverless P2P distributed training."""
+from repro.core.exchange import (
+    ExchangeContext,
+    ExchangeProtocol,
+    available_exchanges,
+    get_exchange,
+    register_exchange,
+)
 from repro.core.p2p import (
+    TrainState,
     Topology,
+    as_train_state,
     build_p2p_train_step,
+    exchange_context,
     exchange_gradients,
     init_mailbox,
     lambda_shard,
@@ -12,7 +22,7 @@ from repro.core.convergence import (
     EarlyStopping,
     ReduceLROnPlateau,
 )
-from repro.core.cost import InstanceCost, ServerlessCost, TPUCost
+from repro.core.cost import CommCost, InstanceCost, ServerlessCost, TPUCost
 from repro.core.mailbox import HostMailbox
 from repro.core.serverless import (
     ServerlessExecutor,
@@ -22,8 +32,16 @@ from repro.core.serverless import (
 from repro.core.simulate import LocalP2PCluster
 
 __all__ = [
+    "ExchangeContext",
+    "ExchangeProtocol",
+    "available_exchanges",
+    "get_exchange",
+    "register_exchange",
+    "TrainState",
     "Topology",
+    "as_train_state",
     "build_p2p_train_step",
+    "exchange_context",
     "exchange_gradients",
     "init_mailbox",
     "lambda_shard",
@@ -33,6 +51,7 @@ __all__ = [
     "ConvergenceDetector",
     "EarlyStopping",
     "ReduceLROnPlateau",
+    "CommCost",
     "InstanceCost",
     "ServerlessCost",
     "TPUCost",

@@ -77,6 +77,37 @@ class InstanceCost:
 
 
 @dataclass(frozen=True)
+class CommCost:
+    """Per-step gradient-exchange wire cost of one peer.
+
+    ``wire_bytes_per_step`` comes straight from the active
+    :class:`~repro.core.exchange.ExchangeProtocol`'s byte accounting
+    (``protocol.wire_bytes`` / ``P2PTrainer.comm_cost`` /
+    ``LocalP2PCluster.comm_cost``), so compression and sparsification show
+    up in wire seconds and egress dollars without re-deriving sizes.
+    """
+
+    wire_bytes_per_step: int
+    bandwidth_bps: float = 1e9  # the paper's simulated inter-peer link
+    usd_per_gb_egress: float = 0.0  # e.g. S3 / inter-AZ transfer pricing
+
+    @property
+    def seconds_per_step(self) -> float:
+        return self.wire_bytes_per_step * 8.0 / self.bandwidth_bps
+
+    @property
+    def usd_per_step(self) -> float:
+        return self.wire_bytes_per_step / 1e9 * self.usd_per_gb_egress
+
+    def summary(self) -> str:
+        return (
+            f"{self.wire_bytes_per_step/1e6:.2f} MB/peer/step on the wire "
+            f"({self.seconds_per_step*1e3:.1f} ms at "
+            f"{self.bandwidth_bps/1e9:g} Gb/s)"
+        )
+
+
+@dataclass(frozen=True)
 class TPUCost:
     """Beyond-paper: the same trade-off expressed in chip-seconds."""
 

@@ -2,38 +2,42 @@
 
 Peers are slices of the *manual* mesh axes (``peer_axes``); the serverless
 lambda pool / tensor parallelism is the remaining *auto* axis handled by
-GSPMD. The whole train step runs inside ``jax.shard_map`` manual over
-``peer_axes`` so the per-peer gradient ``g_{t,r}`` is a first-class value and
-the gradient exchange is an explicit, swappable collective:
+GSPMD. The whole train step runs inside ``shard_map`` manual over
+``peer_axes`` so the per-peer gradient ``g_{t,r}`` is a first-class value
+and the gradient exchange is an explicit, swappable
+:class:`~repro.core.exchange.ExchangeProtocol` resolved from the registry
+by name:
 
-  exchange="allgather_mean"  (paper-faithful)
-      every peer publishes g_r to its queue and consumes everyone else's,
-      then averages locally  ->  all_gather over peers + local mean.
-      The all_gather *is* the synchronization barrier (§III-B.6).
-  exchange="psum_mean"       (beyond-paper optimized)
-      one fused all-reduce; mathematically identical, strictly less traffic
-      (no P-way buffer materialization).
-  exchange="qsgd"            (paper §III-B.4)
-      QSGD-quantize g_r, all_gather the int8 payload + bucket norms,
-      dequantize + average locally. 8/32 bits on the wire.
+  ``allgather_mean``  (paper-faithful)   publish/consume/average; the
+                      all_gather IS the synchronization barrier (§III-B.6)
+  ``psum_mean``       (beyond-paper)     one fused all-reduce, same math
+  ``qsgd``            (paper §III-B.4)   int8 levels + bucket norms
+  ``topk``            (beyond-paper)     top-k sparsified values + indices
+  ``async``           (paper §III-B.5)   staleness-K mailbox register bank
 
-Async (staleness-1) exchange keeps the mailbox register bank from the
-previous step in the training state — other peers' gradients are consumed
-one step stale, the paper's "latest available gradient" semantics.
+``Topology(exchange="<name>")`` accepts any registered name, so adding a
+protocol never touches this module. The train state is the
+:class:`TrainState` dataclass pytree (dict-style access kept for
+backward compatibility).
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import compression as C
+from repro.core.exchange import (
+    ExchangeContext,
+    ExchangeProtocol,
+    get_exchange,
+)
 from repro.optim import Optimizer, apply_updates, clip_by_global_norm
 
 
@@ -43,9 +47,11 @@ class Topology:
 
     peer_axes: Tuple[str, ...] = ("data",)  # manual axes: one peer per slice
     lambda_axis: Optional[str] = "model"  # auto axis: serverless pool / TP
-    exchange: str = "allgather_mean"  # allgather_mean | psum_mean | qsgd
+    exchange: str = "allgather_mean"  # any name in exchange.available_exchanges()
     qsgd: Optional[C.QSGDConfig] = None
-    async_mode: bool = False  # staleness-1 mailbox exchange
+    async_mode: bool = False  # shorthand for exchange="async"
+    staleness: int = 1  # async: consume banks published K steps ago
+    topk_frac: float = 0.01  # topk: fraction of entries shipped
     serverless: bool = True  # fan micro-batches out over lambda_axis
     grad_clip: float = 0.0
     # beyond-paper knobs (EXPERIMENTS.md §Perf):
@@ -61,6 +67,13 @@ class Topology:
     def axis(self):
         return self.peer_axes if len(self.peer_axes) > 1 else self.peer_axes[0]
 
+    @property
+    def exchange_name(self) -> str:
+        return "async" if self.async_mode else self.exchange
+
+    def protocol(self) -> ExchangeProtocol:
+        return get_exchange(self.exchange_name)
+
 
 def peer_rank(topo: Topology) -> jnp.ndarray:
     return lax.axis_index(topo.axis)
@@ -73,88 +86,152 @@ def peer_count_static(topo: Topology, mesh) -> int:
     return n
 
 
+def exchange_context(
+    topo: Topology, mesh=None, *, num_peers: Optional[int] = None
+) -> ExchangeContext:
+    """Build the :class:`ExchangeContext` a protocol sees for ``topo``."""
+    if num_peers is None:
+        num_peers = peer_count_static(topo, mesh) if (mesh is not None and topo.peer_axes) else 1
+    return ExchangeContext(
+        axis=topo.axis if topo.peer_axes else None,
+        num_peers=num_peers,
+        wire_dtype=jnp.dtype(topo.exchange_dtype),
+        qsgd=topo.qsgd,
+        topk_frac=topo.topk_frac,
+        staleness=topo.staleness,
+    )
+
+
 # ---------------------------------------------------------------------------
-# Gradient exchange protocols (run inside the manual region)
+# Train state
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class TrainState:
+    """The train-step carry, as a registered dataclass pytree.
+
+    Replaces the raw ``{"params": ..., "opt_state": ...}`` dict;
+    ``state["params"]``, ``state.get("mailbox")`` and ``dict(state)`` keep
+    working so existing call sites migrate incrementally. ``mailbox`` holds
+    the exchange protocol's carried state (None for sync protocols).
+    """
+
+    params: Any
+    opt_state: Any
+    step: Any
+    key: Any
+    mailbox: Any = None
+
+    # dict-style access (legacy call sites). Matches the old dict's
+    # semantics: "mailbox" is only present when set, so lookups of an
+    # absent mailbox raise KeyError and membership tests return False.
+    def __getitem__(self, name: str):
+        if name not in self.keys():
+            raise KeyError(name)
+        return getattr(self, name)
+
+    def get(self, name: str, default=None):
+        if name not in _TRAIN_STATE_FIELDS:
+            return default
+        val = getattr(self, name)
+        return default if (name == "mailbox" and val is None) else val
+
+    def keys(self):
+        return [
+            f for f in _TRAIN_STATE_FIELDS
+            if not (f == "mailbox" and self.mailbox is None)
+        ]
+
+    def __contains__(self, name) -> bool:
+        return name in self.keys()
+
+    def __iter__(self):
+        return iter(self.keys())
+
+    def replace(self, **updates) -> "TrainState":
+        return dataclasses.replace(self, **updates)
+
+
+_TRAIN_STATE_FIELDS = tuple(f.name for f in dataclasses.fields(TrainState))
+
+
+def _train_state_flatten_with_keys(s: TrainState):
+    children = tuple(
+        (jax.tree_util.GetAttrKey(name), getattr(s, name))
+        for name in _TRAIN_STATE_FIELDS
+    )
+    return children, None
+
+
+def _train_state_flatten(s: TrainState):
+    return tuple(getattr(s, name) for name in _TRAIN_STATE_FIELDS), None
+
+
+def _train_state_unflatten(_, children) -> TrainState:
+    return TrainState(*children)
+
+
+jax.tree_util.register_pytree_with_keys(
+    TrainState,
+    _train_state_flatten_with_keys,
+    _train_state_unflatten,
+    _train_state_flatten,
+)
+
+
+def as_train_state(state) -> TrainState:
+    """Accept a TrainState or a legacy state dict."""
+    if isinstance(state, TrainState):
+        return state
+    if isinstance(state, Mapping):
+        extra = set(state) - set(_TRAIN_STATE_FIELDS)
+        if extra:
+            # Refuse rather than silently dropping caller-carried entries.
+            raise ValueError(
+                f"legacy train-state dict has entries TrainState cannot carry: "
+                f"{sorted(extra)}; TrainState fields are {_TRAIN_STATE_FIELDS}"
+            )
+        return TrainState(
+            params=state["params"],
+            opt_state=state["opt_state"],
+            step=state["step"],
+            key=state["key"],
+            mailbox=state.get("mailbox"),
+        )
+    raise TypeError(f"expected TrainState or mapping, got {type(state)!r}")
+
+
+# ---------------------------------------------------------------------------
+# Gradient exchange (registry-dispatched; see repro/core/exchange.py)
 # ---------------------------------------------------------------------------
 
 
 def exchange_gradients(
     grads, topo: Topology, key: Optional[jax.Array] = None, mailbox=None
 ):
-    """Returns (averaged_grads, new_mailbox).
+    """Returns (averaged_grads, new_mailbox) via the registered protocol.
 
-    ``mailbox`` (async mode only) is the register bank of every peer's last
-    published gradient, shape (P, ...) per leaf.
+    Thin compatibility wrapper over ``topo.protocol().combine``; the train
+    step builder calls the protocol directly.
     """
     if not topo.peer_axes:
         return grads, mailbox
-
-    # Wire dtype: bf16 halves the exchange bytes (beyond-paper knob); the
-    # averaged result is promoted back to fp32 for the optimizer.
-    xdt = jnp.dtype(topo.exchange_dtype)
-
-    if topo.async_mode:
-        if mailbox is None:
-            raise ValueError("async exchange requires a mailbox state")
-        fresh_bank = jax.tree.map(
-            lambda g: lax.all_gather(g.astype(jnp.float32), topo.axis), grads
-        )
-        r = peer_rank(topo)
-        nP = fresh_bank and jax.tree.leaves(fresh_bank)[0].shape[0]
-
-        def combine(bank_old, g):
-            # own gradient fresh; others consumed from the (stale) mailbox
-            others = bank_old.sum(0) - bank_old[r]
-            return (others + g.astype(jnp.float32)) / nP
-
-        avg = jax.tree.map(combine, mailbox, grads)
-        return avg, fresh_bank
-
-    if topo.exchange == "allgather_mean":
-        # Algorithm 1: publish to own queue, consume all queues, average.
-        bank = jax.tree.map(
-            lambda g: lax.all_gather(g.astype(xdt), topo.axis), grads
-        )
-        avg = jax.tree.map(lambda b: b.astype(jnp.float32).mean(axis=0), bank)
-        return avg, mailbox
-
-    if topo.exchange == "psum_mean":
-        avg = jax.tree.map(
-            lambda g: lax.pmean(g.astype(xdt), topo.axis).astype(jnp.float32),
-            grads,
-        )
-        return avg, mailbox
-
-    if topo.exchange == "qsgd":
-        qcfg = topo.qsgd or C.QSGDConfig()
-        if key is None:
-            raise ValueError("qsgd exchange requires an rng key")
-        key = jax.random.fold_in(key, peer_rank(topo))
-
-        def leaf(g, k):
-            payload = C.quantize(g, k, qcfg)
-            lev = lax.all_gather(payload["levels"], topo.axis)  # (P, nb, B)
-            nrm = lax.all_gather(payload["norms"], topo.axis)  # (P, nb)
-            deq = jax.vmap(lambda l, n: C.qsgd_dequantize_ref(l, n, qcfg.levels))(
-                lev, nrm
-            )
-            flat = deq.mean(axis=0).reshape(-1)
-            n = g.size
-            return flat[:n].reshape(g.shape)
-
-        leaves, treedef = jax.tree_util.tree_flatten(grads)
-        keys = jax.random.split(key, len(leaves))
-        avg = jax.tree_util.tree_unflatten(
-            treedef, [leaf(g, k) for g, k in zip(leaves, keys)]
-        )
-        return avg, mailbox
-
-    raise ValueError(f"unknown exchange {topo.exchange!r}")
+    ctx = exchange_context(topo, num_peers=_mailbox_peers(mailbox))
+    return topo.protocol().combine(grads, ctx, key=key, state=mailbox)
 
 
-def init_mailbox(grads_like, num_peers: int):
-    return jax.tree.map(
-        lambda g: jnp.zeros((num_peers,) + g.shape, jnp.float32), grads_like
+def _mailbox_peers(mailbox) -> int:
+    if mailbox is None:
+        return 1
+    leaves = jax.tree.leaves(mailbox)
+    return int(leaves[0].shape[1]) if leaves else 1
+
+
+def init_mailbox(grads_like, num_peers: int, *, staleness: int = 1):
+    """Zero-initialized staleness-K mailbox ring, leaves (K, P, *grad)."""
+    return get_exchange("async").init_state(
+        grads_like, ExchangeContext(num_peers=num_peers, staleness=staleness)
     )
 
 
@@ -174,6 +251,12 @@ def lambda_shard(batch: Dict[str, jnp.ndarray], topo: Topology):
     if not (topo.serverless and topo.lambda_axis):
         return batch
     ax = topo.lambda_axis
+    auto = compat.auto_axes()
+    if auto is not None and ax not in auto:
+        # Old-JAX full-manual fallback: the lambda axis is manual here, so
+        # the GSPMD fan-out constraint would be rejected; peers replicate
+        # their compute over it instead (see repro.compat.shard_map).
+        return batch
     return jax.tree.map(
         lambda x: lax.with_sharding_constraint(x, P(*((ax,) + (None,) * (x.ndim - 1)))),
         batch,
@@ -194,8 +277,13 @@ def build_p2p_train_step(
 ):
     """Returns step(train_state, batch) -> (train_state, metrics).
 
-    train_state = {params, opt_state, step, key[, mailbox]}.
+    ``train_state`` is a :class:`TrainState` (legacy dicts still accepted).
+    One code path serves both the peer (``shard_map`` over ``peer_axes``)
+    and the no-peer (single worker) case: the peer body is identical, only
+    the wrapping differs.
     """
+    protocol = topo.protocol() if topo.peer_axes else None
+    ctx = exchange_context(topo, mesh) if topo.peer_axes else None
 
     def peer_body(params, opt_state, step_idx, key, batch, mailbox):
         batch = lambda_shard(batch, topo)
@@ -247,7 +335,12 @@ def build_p2p_train_step(
         else:
             gnorm = jnp.zeros((), jnp.float32)
         step_key = jax.random.fold_in(key, step_idx)
-        avg, new_mailbox = exchange_gradients(grads, topo, step_key, mailbox)
+        if protocol is None:
+            avg, new_mailbox = grads, mailbox
+        else:
+            avg, new_mailbox = protocol.combine(
+                grads, ctx, key=step_key, state=mailbox
+            )
         lr = schedule(step_idx)
         updates, opt_state = optimizer.update(avg, opt_state, params, lr)
         params = apply_updates(params, updates)
@@ -256,42 +349,32 @@ def build_p2p_train_step(
         metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr, "aux": aux}
         return params, opt_state, metrics, new_mailbox
 
-    if not topo.peer_axes:
-
-        def step(state, batch):
-            params, opt_state, metrics, mb = peer_body(
-                state["params"], state["opt_state"], state["step"], state["key"],
-                batch, state.get("mailbox"),
+    def run_body(state: TrainState, batch):
+        if not topo.peer_axes:
+            return peer_body(
+                state.params, state.opt_state, state.step, state.key,
+                batch, state.mailbox,
             )
-            out = {**state, "params": params, "opt_state": opt_state,
-                   "step": state["step"] + 1}
-            if mb is not None:
-                out["mailbox"] = mb
-            return out, metrics
-
-        return step
-
-    batch_spec = P(topo.axis)
-    replicated = P()
-
-    def step(state, batch):
-        mailbox = state.get("mailbox")
-        bspec = jax.tree.map(lambda _: batch_spec, batch)
-        mspec = None if mailbox is None else jax.tree.map(lambda _: replicated, mailbox)
-        fn = jax.shard_map(
+        replicated = P()
+        bspec = jax.tree.map(lambda _: P(topo.axis), batch)
+        mspec = (
+            None if state.mailbox is None
+            else jax.tree.map(lambda _: replicated, state.mailbox)
+        )
+        fn = compat.shard_map(
             peer_body,
             mesh=mesh,
             in_specs=(
-                jax.tree.map(lambda _: replicated, state["params"]),
-                jax.tree.map(lambda _: replicated, state["opt_state"]),
+                jax.tree.map(lambda _: replicated, state.params),
+                jax.tree.map(lambda _: replicated, state.opt_state),
                 replicated,
                 replicated,
                 bspec,
                 mspec,
             ),
             out_specs=(
-                jax.tree.map(lambda _: replicated, state["params"]),
-                jax.tree.map(lambda _: replicated, state["opt_state"]),
+                jax.tree.map(lambda _: replicated, state.params),
+                jax.tree.map(lambda _: replicated, state.opt_state),
                 {"loss": replicated, "grad_norm": replicated, "lr": replicated,
                  "aux": replicated},
                 mspec,
@@ -299,14 +382,17 @@ def build_p2p_train_step(
             axis_names=set(topo.peer_axes),
             check_vma=False,
         )
-        params, opt_state, metrics, mb = fn(
-            state["params"], state["opt_state"], state["step"], state["key"],
-            batch, mailbox,
+        return fn(
+            state.params, state.opt_state, state.step, state.key,
+            batch, state.mailbox,
         )
-        out = {**state, "params": params, "opt_state": opt_state,
-               "step": state["step"] + 1}
-        if mb is not None:
-            out["mailbox"] = mb
-        return out, metrics
+
+    def step(state, batch):
+        state = as_train_state(state)
+        params, opt_state, metrics, mb = run_body(state, batch)
+        new_state = state.replace(
+            params=params, opt_state=opt_state, step=state.step + 1, mailbox=mb
+        )
+        return new_state, metrics
 
     return step

@@ -30,6 +30,8 @@ from repro import models
 from repro.configs.base import ModelConfig
 from repro.core import compression as C
 from repro.core.convergence import ConvergenceDetector
+from repro.core.cost import CommCost
+from repro.core.exchange import ExchangeContext, ExchangeProtocol, get_exchange
 from repro.core.mailbox import HostMailbox
 from repro.core.serverless import ExecutionReport, ServerlessExecutor
 from repro.data import DataLoader, Dataset, Partitioner, BatchKey
@@ -78,7 +80,9 @@ class LocalP2PCluster:
         lr: float = 0.001,
         sync: bool = True,
         executor: Optional[ServerlessExecutor] = None,
+        exchange: Optional[str] = None,  # registered protocol name
         qsgd: Optional[C.QSGDConfig] = None,
+        topk_frac: float = 0.01,
         network_bandwidth_bps: float = 1e9,  # simulated inter-peer link
         peer_speeds: Optional[Sequence[float]] = None,
         seed: int = 0,
@@ -101,6 +105,14 @@ class LocalP2PCluster:
         self.sync = sync
         self.executor = executor
         self.qsgd = qsgd
+        # The wire format comes from the same ExchangeProtocol registry the
+        # TPU shard_map path uses; the legacy qsgd= kwarg implies "qsgd".
+        if exchange is None:
+            exchange = "qsgd" if qsgd is not None else "allgather_mean"
+        self.protocol: ExchangeProtocol = get_exchange(exchange)
+        self.xctx = ExchangeContext(
+            num_peers=num_peers, qsgd=qsgd, topk_frac=topk_frac,
+        )
         self.bw = network_bandwidth_bps
         self.mailbox = HostMailbox(num_peers)
         self.detector = ConvergenceDetector(lr, mode="max", max_epochs=10_000)
@@ -201,17 +213,14 @@ class LocalP2PCluster:
         return g, loss, acc, compute_wall
 
     def _publish(self, peer: PeerState, grads, epoch: int, at_time: float):
-        """SendGradientsToMyQueue, with optional QSGD compression."""
+        """SendGradientsToMyQueue via the exchange protocol's wire format."""
         with peer.metrics.stage("send_gradients"):
-            if self.qsgd is not None:
-                self.key, sub = jax.random.split(self.key)
-                payload, _ = C.quantize_tree(grads, sub, self.qsgd)
-                nbytes = C.payload_bytes(payload)
-                msg = ("qsgd", payload)
-            else:
-                nbytes = C.raw_bytes(grads)
-                msg = ("raw", grads)
-            jax.block_until_ready(jax.tree.leaves(msg[1]))
+            key = None
+            if self.protocol.requires_key:
+                self.key, key = jax.random.split(self.key)
+            payload, nbytes = self.protocol.host_encode(grads, self.xctx, key=key)
+            msg = (self.protocol.name, payload)
+            jax.block_until_ready(jax.tree.leaves(payload))
             wire_s = nbytes * 8 / self.bw
             self.mailbox.publish(
                 peer.rank, msg, nbytes=nbytes, time=at_time + wire_s, epoch=epoch
@@ -230,15 +239,10 @@ class LocalP2PCluster:
                 msg = self.mailbox.consume(other, at_time=at_time)
                 if msg is None:
                     continue  # async: nothing published yet -> skip
-                kind, payload = msg.payload
-                if kind == "qsgd":
-                    g = C.dequantize_tree(payload, self.qsgd)
-                    g = jax.tree.map(
-                        lambda a, b: a.reshape(b.shape), g, own_grads
-                    )
-                else:
-                    g = payload
-                grads_peers[other] = g
+                _, payload = msg.payload
+                grads_peers[other] = self.protocol.host_decode(
+                    payload, own_grads, self.xctx
+                )
                 wire_s = 0.0  # receive wire time folded into publish latency
                 peer.recv_time_s += wire_s
         return grads_peers
@@ -255,6 +259,19 @@ class LocalP2PCluster:
             )
             jax.block_until_ready(jax.tree.leaves(peer.params))
         peer.steps_done += 1
+
+    def comm_cost(self, *, usd_per_gb: float = 0.0) -> CommCost:
+        """Per-step wire cost of one peer under the active exchange protocol.
+
+        Uses the protocol's host-path accounting, which matches what
+        ``_publish`` actually charges the simulated link.
+        """
+        grads_like = jax.eval_shape(lambda p: p, self.peers[0].params)
+        return CommCost(
+            wire_bytes_per_step=self.protocol.host_wire_bytes(grads_like, self.xctx),
+            bandwidth_bps=self.bw,
+            usd_per_gb_egress=usd_per_gb,
+        )
 
     def evaluate(self, peer_rank: int = 0, *, num_batches: int = 2, epoch: int = 10_000):
         peer = self.peers[peer_rank]

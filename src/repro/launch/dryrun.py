@@ -30,10 +30,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro import models
+from repro import compat, models
 from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.core.p2p import Topology
+from repro.core.p2p import TrainState, Topology
 from repro.launch import sharding as SH
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
 from repro.models.layers import axis_rules
@@ -116,7 +116,7 @@ def lower_one(
     )
     rules = SH.activation_rules(cfg, shape, mesh, peer_axes=topo.peer_axes)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         with axis_rules(rules):
             if shape.mode == "train":
                 opt = adam() if optimizer == "adam" else sgd(momentum=0.9)
@@ -126,18 +126,18 @@ def lower_one(
                 opt_shapes = jax.eval_shape(opt.init, params_shapes)
                 p_sh = SH.param_shardings(params_shapes, cfg, mesh)
                 o_sh = SH.param_shardings(opt_shapes, cfg, mesh)
-                state_shapes = {
-                    "params": params_shapes,
-                    "opt_state": opt_shapes,
-                    "step": jax.ShapeDtypeStruct((), jnp.int32),
-                    "key": jax.ShapeDtypeStruct((2,), jnp.uint32),
-                }
-                state_sh = {
-                    "params": p_sh,
-                    "opt_state": o_sh,
-                    "step": NamedSharding(mesh, P()),
-                    "key": NamedSharding(mesh, P()),
-                }
+                state_shapes = TrainState(
+                    params=params_shapes,
+                    opt_state=opt_shapes,
+                    step=jax.ShapeDtypeStruct((), jnp.int32),
+                    key=jax.ShapeDtypeStruct((2,), jnp.uint32),
+                )
+                state_sh = TrainState(
+                    params=p_sh,
+                    opt_state=o_sh,
+                    step=NamedSharding(mesh, P()),
+                    key=NamedSharding(mesh, P()),
+                )
                 batch, batch_sh = input_specs(cfg, shape, mesh, rules)
                 step = build_train_step(
                     cfg, opt, topo, mesh,

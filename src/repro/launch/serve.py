@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import models
+from repro import compat, models
 from repro.configs import get_config, reduced
 from repro.launch.mesh import make_host_mesh
 from repro.launch.sharding import activation_rules
@@ -68,7 +68,7 @@ def main(argv=None):
     def do_prefill(params, state, prompt):
         return models.prefill(params, state, {"tokens": prompt}, cfg)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         with axis_rules(rules):
             t0 = time.time()
             logits, state = do_prefill(params, state, prompts)  # one-shot prefill

@@ -5,7 +5,8 @@
 
 On this CPU container you train REDUCED variants (or the paper's CNNs via
 benchmarks/); on a TPU slice the same driver runs the full configs with the
-production mesh.
+production mesh. Any protocol registered in
+``repro.core.exchange`` is accepted by ``--exchange``.
 """
 from __future__ import annotations
 
@@ -16,10 +17,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import models
+from repro import compat, models
 from repro.configs import get_config, reduced
 from repro.core.compression import QSGDConfig
 from repro.core.convergence import ConvergenceDetector
+from repro.core.exchange import available_exchanges
 from repro.core.p2p import Topology
 from repro.data import BatchKey, DataLoader, Partitioner, make_dataset
 from repro.launch.mesh import make_host_mesh
@@ -27,8 +29,7 @@ from repro.launch.sharding import activation_rules
 from repro.models.layers import axis_rules
 from repro.optim import adam, sgd
 from repro.optim.schedules import warmup_cosine
-from repro.train import build_train_step, init_train_state
-from repro.train import checkpoint as ckpt
+from repro.train import P2PTrainer
 from repro.configs.base import ShapeConfig
 
 
@@ -51,10 +52,15 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--optimizer", default="adam", choices=["adam", "sgd"])
     ap.add_argument("--exchange", default="allgather_mean",
-                    choices=["allgather_mean", "psum_mean", "qsgd"])
+                    choices=list(available_exchanges()))
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="async: consume banks published K steps ago")
+    ap.add_argument("--topk-frac", type=float, default=0.01,
+                    help="topk: fraction of gradient entries shipped")
     ap.add_argument("--data-parallel", type=int, default=None)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--restore", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
@@ -70,12 +76,20 @@ def main(argv=None):
         lambda_axis="model" if mesh.shape["model"] > 1 else None,
         exchange=args.exchange,
         qsgd=QSGDConfig(levels=127, bucket=512) if args.exchange == "qsgd" else None,
+        staleness=args.staleness,
+        topk_frac=args.topk_frac,
         serverless=mesh.shape["model"] > 1,
     )
     opt = adam() if args.optimizer == "adam" else sgd(momentum=0.9)
     sched = warmup_cosine(args.lr, args.steps // 10 + 1, args.steps)
-    step_fn = build_train_step(cfg, opt, topo, mesh, sched)
-    state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
+    trainer = P2PTrainer(cfg, opt, topo, mesh, sched)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    if args.restore:
+        state = trainer.restore(args.restore, state)
+        print(f"restored checkpoint from {args.restore} (step {int(state.step)})")
+    if topo.peer_axes:
+        cc = trainer.comm_cost(state.params)
+        print(f"exchange={topo.exchange_name}: {cc.summary()}")
 
     ds = make_dataset("lm", size=200_000, vocab_size=cfg.vocab_size, seq_len=args.seq)
     loader = DataLoader(Partitioner(ds, 1), 0, args.batch)
@@ -84,16 +98,15 @@ def main(argv=None):
     rules = activation_rules(cfg, shape, mesh, peer_axes=topo.peer_axes)
     detector = ConvergenceDetector(args.lr, mode="min", max_epochs=10**6)
 
-    jstep = jax.jit(step_fn)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         with axis_rules(rules):
             for i in range(args.steps):
                 batch = make_lm_batch(
                     loader, BatchKey(0, i // loader.num_batches, i % loader.num_batches),
                     cfg.vocab_size,
                 )
-                state, metrics = jstep(state, batch)
+                state, metrics = trainer.step(state, batch)
                 if (i + 1) % args.log_every == 0 or i == 0:
                     loss = float(metrics["loss"])
                     print(
@@ -105,7 +118,7 @@ def main(argv=None):
                         print("converged (early stop)")
                         break
     if args.checkpoint:
-        ckpt.save(args.checkpoint, state["params"], step=int(state["step"]))
+        trainer.save(args.checkpoint, state)
         print(f"saved checkpoint to {args.checkpoint}")
     return state
 

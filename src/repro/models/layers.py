@@ -41,21 +41,9 @@ def axis_rules(rules: Dict[str, Any]):
 
 def _auto_axes() -> Optional[frozenset]:
     """Mesh axes currently in Auto (GSPMD) mode; None if no mesh context."""
-    try:
-        am = jax.sharding.get_abstract_mesh()
-    except Exception:  # pragma: no cover
-        return None
-    if am is None or not am.axis_names:
-        return None
-    try:
-        types = am.axis_types
-        from jax.sharding import AxisType
+    from repro.compat import auto_axes
 
-        return frozenset(
-            n for n, t in zip(am.axis_names, types) if t == AxisType.Auto
-        )
-    except Exception:  # pragma: no cover
-        return frozenset(am.axis_names)
+    return auto_axes()
 
 
 def logical_to_spec(*names: Optional[str]) -> P:

@@ -4,5 +4,12 @@ from repro.train.steps import (
     build_serve_step,
     init_train_state,
 )
+from repro.train.trainer import P2PTrainer
 
-__all__ = ["lm_loss", "build_train_step", "build_serve_step", "init_train_state"]
+__all__ = [
+    "lm_loss",
+    "build_train_step",
+    "build_serve_step",
+    "init_train_state",
+    "P2PTrainer",
+]

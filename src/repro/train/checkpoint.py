@@ -3,6 +3,15 @@
 Works for params, optimizer states and mailbox buffers; sharded arrays are
 fully gathered before save (fine at the scales we train on CPU; the dry-run
 scale never checkpoints).
+
+Formats are versioned through the ``format`` metadata key:
+
+* (absent) / ``"pytree/v1"`` — a bare pytree, typically params-only
+  (what ``save`` writes).
+* ``"train-state/v2"`` — a full :class:`~repro.core.p2p.TrainState`
+  (params + opt state + step + rng + exchange mailbox), written by
+  :func:`save_state`. :func:`restore_state` reads either: a v1 params-only
+  checkpoint restores into ``like.params`` and keeps the rest fresh.
 """
 from __future__ import annotations
 
@@ -14,13 +23,23 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
+V1_FORMAT = "pytree/v1"
+STATE_FORMAT = "train-state/v2"
+
+
+def _path_str(p) -> str:
+    # DictKey -> .key, SequenceKey -> .idx, GetAttrKey (dataclass pytrees
+    # like TrainState) -> .name; fall back to str(p) otherwise.
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(
-            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
-        )
+        key = "/".join(_path_str(p) for p in path)
         flat[key] = np.asarray(leaf)
     return flat
 
@@ -29,7 +48,8 @@ def save(path: str, tree: Any, *, step: int = 0, extra: Optional[dict] = None) -
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
     np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
-    meta = {"step": step, "treedef": _treedef_repr(tree), **(extra or {})}
+    meta = {"step": step, "treedef": _treedef_repr(tree),
+            "format": V1_FORMAT, **(extra or {})}
     with open(_meta_path(path), "w") as f:
         json.dump(meta, f)
 
@@ -43,7 +63,7 @@ def restore(path: str, like: Any) -> Tuple[Any, dict]:
         raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
     keys = [
-        "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        "/".join(_path_str(p) for p in path)
         for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]
     ]
     new_leaves = []
@@ -58,6 +78,48 @@ def restore(path: str, like: Any) -> Tuple[Any, dict]:
         with open(mp) as f:
             meta = json.load(f)
     return jax.tree_util.tree_unflatten(treedef, new_leaves), meta
+
+
+def save_state(path: str, state, *, extra: Optional[dict] = None) -> None:
+    """Save a full TrainState (v2 format): params, opt state, step, rng, mailbox."""
+    from repro.core.p2p import as_train_state
+
+    state = as_train_state(state)
+    save(
+        path, state, step=int(jax.device_get(state.step)),
+        extra={"format": STATE_FORMAT, **(extra or {})},
+    )
+
+
+def restore_state(path: str, like) -> Tuple[Any, dict]:
+    """Restore a TrainState from a v2 checkpoint, or params-only from v1.
+
+    ``like`` supplies the target structure (shapes/dtypes must match). A v1
+    / unversioned checkpoint holds bare params: they restore into
+    ``like.params`` and the optimizer state / step / rng stay as in ``like``.
+    """
+    from repro.core.p2p import as_train_state
+
+    like = as_train_state(like)
+    meta = {}
+    mp = _meta_path(path)
+    if os.path.exists(mp):
+        with open(mp) as f:
+            meta = json.load(f)
+    if meta.get("format") == STATE_FORMAT:
+        if like.mailbox is not None:
+            # A v2 checkpoint saved under a sync protocol has no mailbox
+            # leaves; restoring into an async `like` keeps its cold ring.
+            with np.load(path if path.endswith(".npz") else path + ".npz") as npz:
+                saved_mailbox = any(
+                    k == "mailbox" or k.startswith("mailbox/") for k in npz.files
+                )
+            if not saved_mailbox:
+                core, cmeta = restore(path, like.replace(mailbox=None))
+                return core.replace(mailbox=like.mailbox), cmeta
+        return restore(path, like)
+    params, pmeta = restore(path, like.params)
+    return like.replace(params=params), {**meta, **pmeta}
 
 
 def _meta_path(path: str) -> str:

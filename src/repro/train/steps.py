@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from repro import models
 from repro.configs.base import ModelConfig
-from repro.core.p2p import Topology, build_p2p_train_step
+from repro.core.p2p import TrainState, Topology, build_p2p_train_step
 from repro.optim import Optimizer
 
 
@@ -42,14 +42,14 @@ def lm_loss(
 
 def init_train_state(
     key: jax.Array, cfg: ModelConfig, optimizer: Optimizer
-) -> Dict[str, Any]:
+) -> TrainState:
     params = models.init_model(key, cfg)
-    return {
-        "params": params,
-        "opt_state": optimizer.init(params),
-        "step": jnp.zeros((), jnp.int32),
-        "key": jax.random.fold_in(key, 1),
-    }
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        step=jnp.zeros((), jnp.int32),
+        key=jax.random.fold_in(key, 1),
+    )
 
 
 def build_train_step(

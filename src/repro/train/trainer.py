@@ -1,0 +1,117 @@
+"""P2PTrainer — the one-object facade over the P2P training stack.
+
+Bundles what every driver used to assemble by hand (topology resolution,
+exchange-protocol lookup, step building, state init, checkpointing, wire
+cost) behind a single API::
+
+    trainer = P2PTrainer(cfg, optimizer, topo, mesh, schedule)
+    state = trainer.init_state(jax.random.PRNGKey(0))
+    state, metrics = trainer.step(state, batch)
+    print(trainer.comm_cost().seconds_per_step)
+
+Used by ``launch/train.py``, ``examples/p2p_serverless_train.py`` and the
+benchmarks; ``core/simulate.py`` shares the same ExchangeProtocol
+implementations through the registry.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.cost import CommCost
+from repro.core.exchange import ExchangeProtocol
+from repro.core.p2p import (
+    TrainState,
+    Topology,
+    as_train_state,
+    build_p2p_train_step,
+    exchange_context,
+)
+from repro.optim import Optimizer
+from repro.train import checkpoint as ckpt
+from repro.train.steps import init_train_state, lm_loss
+
+
+class P2PTrainer:
+    """Facade over loss/step/exchange/state for P2P training on a mesh."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        optimizer: Optimizer,
+        topo: Topology,
+        mesh,
+        schedule: Callable,
+        *,
+        loss_fn: Optional[Callable] = None,  # (params, batch) -> (loss, aux)
+        moe_dispatch: str = "dense",
+        use_ssd_kernel: bool = False,
+        jit: bool = True,
+    ):
+        self.cfg = cfg
+        self.optimizer = optimizer
+        self.topo = topo
+        self.mesh = mesh
+        self.schedule = schedule
+        self.protocol: ExchangeProtocol = topo.protocol()
+        self.ctx = exchange_context(topo, mesh)
+        if loss_fn is None:
+            loss_fn = partial(
+                lm_loss, cfg=cfg, moe_dispatch=moe_dispatch,
+                use_ssd_kernel=use_ssd_kernel,
+            )
+        self.loss_fn = loss_fn
+        self.step_fn = build_p2p_train_step(loss_fn, optimizer, topo, mesh, schedule)
+        self._step = jax.jit(self.step_fn) if jit else self.step_fn
+
+    @property
+    def num_peers(self) -> int:
+        return self.ctx.num_peers
+
+    # -- state ---------------------------------------------------------------
+    def init_state(self, key: jax.Array) -> TrainState:
+        state = init_train_state(key, self.cfg, self.optimizer)
+        if self.topo.peer_axes:
+            mailbox = self.protocol.init_state(state.params, self.ctx)
+            if mailbox is not None:
+                state = state.replace(mailbox=mailbox)
+        return state
+
+    # -- stepping ------------------------------------------------------------
+    def step(self, state, batch):
+        """One P2P train step; returns (new_state, metrics)."""
+        return self._step(as_train_state(state), batch)
+
+    # -- accounting ----------------------------------------------------------
+    def wire_bytes_per_step(self, params_like=None) -> int:
+        """Bytes one peer publishes per step under the active protocol."""
+        if params_like is None:
+            params_like = jax.eval_shape(
+                lambda: init_train_state(jax.random.PRNGKey(0), self.cfg,
+                                         self.optimizer)
+            ).params
+        return self.protocol.wire_bytes(params_like, self.ctx)
+
+    def comm_cost(
+        self, params_like=None, *, bandwidth_bps: float = 1e9,
+        usd_per_gb: float = 0.0,
+    ) -> CommCost:
+        """Per-step exchange cost, straight from the protocol's byte counts."""
+        return CommCost(
+            wire_bytes_per_step=self.wire_bytes_per_step(params_like),
+            bandwidth_bps=bandwidth_bps,
+            usd_per_gb_egress=usd_per_gb,
+        )
+
+    # -- checkpointing -------------------------------------------------------
+    def save(self, path: str, state, *, extra: Optional[dict] = None) -> None:
+        ckpt.save_state(path, as_train_state(state), extra=extra)
+
+    def restore(self, path: str, like: Optional[TrainState] = None) -> TrainState:
+        if like is None:
+            like = self.init_state(jax.random.PRNGKey(0))
+        state, _ = ckpt.restore_state(path, like)
+        return state

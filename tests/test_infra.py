@@ -87,7 +87,7 @@ def test_stage_metrics_table_shape():
 
 def test_sanitize_spec_drops_nondivisible():
     import jax
-    from jax.sharding import PartitionSpec as P, AxisType
+    from jax.sharding import PartitionSpec as P
     from repro.launch.sharding import sanitize_spec
 
     class FakeMesh:

@@ -26,7 +26,7 @@ def test_exchange_modes_equivalent_multidevice():
     script = textwrap.dedent(
         """
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.configs import get_config, reduced
         from repro.core.p2p import Topology
         from repro.core.compression import QSGDConfig
@@ -35,7 +35,7 @@ def test_exchange_modes_equivalent_multidevice():
         from repro.optim.schedules import constant
         from repro.models.layers import axis_rules
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+        mesh = make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
         cfg = reduced(get_config("qwen2.5-3b"))
         opt = sgd(momentum=0.9)
         state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
@@ -48,7 +48,7 @@ def test_exchange_modes_equivalent_multidevice():
             topo = Topology(peer_axes=("data",), lambda_axis="model", exchange=mode,
                             qsgd=QSGDConfig(levels=127, bucket=256))
             step = build_train_step(cfg, opt, topo, mesh, constant(1e-2))
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 with axis_rules(rules):
                     s2, m = jax.jit(step)(state, batch)
             outs[mode] = s2["params"]

@@ -1,4 +1,4 @@
-"""Async (staleness-1) P2P exchange in the distributed JAX path —
+"""Async (staleness-K) P2P exchange in the distributed JAX path —
 multi-device semantics run in a subprocess (8 fake devices)."""
 import os
 import subprocess
@@ -15,7 +15,7 @@ def test_async_mailbox_exchange_multidevice():
     script = textwrap.dedent(
         """
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
+        from repro.compat import AxisType, make_mesh, set_mesh
         from repro.configs import get_config, reduced
         from repro.core.p2p import Topology, init_mailbox
         from repro.train import build_train_step, init_train_state
@@ -23,7 +23,7 @@ def test_async_mailbox_exchange_multidevice():
         from repro.optim.schedules import constant
         from repro.models.layers import axis_rules
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
+        mesh = make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,)*2)
         cfg = reduced(get_config("qwen2.5-3b"), num_layers=1, d_model=64, vocab_size=64)
         opt = sgd(momentum=0.0)
         state = init_train_state(jax.random.PRNGKey(0), cfg, opt)
@@ -33,17 +33,16 @@ def test_async_mailbox_exchange_multidevice():
                  "kv_heads": None, "experts": None, "vocab": None, "kv_seq": None,
                  "seq": None}
 
-        # async topology with a mailbox in the train state
+        # async topology with a staleness-1 mailbox ring in the train state
         topo = Topology(peer_axes=("data",), lambda_axis="model", async_mode=True)
-        astate = dict(state)
-        astate["mailbox"] = init_mailbox(state["params"], 4)
+        astate = state.replace(mailbox=init_mailbox(state.params, 4))
         step_a = build_train_step(cfg, opt, topo, mesh, constant(1e-2))
 
         # sync reference
         topo_s = Topology(peer_axes=("data",), lambda_axis="model", exchange="psum_mean")
         step_s = build_train_step(cfg, opt, topo_s, mesh, constant(1e-2))
 
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             with axis_rules(rules):
                 s1, m1 = jax.jit(step_a)(astate, batch)
                 s2, m2 = jax.jit(step_a)(s1, batch)
@@ -54,11 +53,30 @@ def test_async_mailbox_exchange_multidevice():
         d = max(float(jnp.abs(a - b).max()) for a, b in zip(
             jax.tree.leaves(s1["params"]), jax.tree.leaves(ss["params"])))
         assert d > 0, "async step should differ from sync on a cold mailbox"
-        # mailbox was refreshed with the step's gradients
+        # mailbox ring was refreshed with the step's gradients: (K=1, P=4, ...)
         mb = jax.tree.leaves(s1["mailbox"])[0]
-        assert mb.shape[0] == 4
+        assert mb.shape[:2] == (1, 4), mb.shape
         assert float(jnp.abs(mb).max()) > 0
         assert bool(jnp.isfinite(m2["loss"]))
+
+        # staleness-2: the bank consumed at step t was published at t-2, so
+        # after one step the ring's oldest slot is still the zero bank and
+        # the fresh bank sits in slot 1
+        topo2 = Topology(peer_axes=("data",), lambda_axis="model", async_mode=True,
+                         staleness=2)
+        astate2 = state.replace(mailbox=init_mailbox(state.params, 4, staleness=2))
+        step_2 = build_train_step(cfg, opt, topo2, mesh, constant(1e-2))
+        with set_mesh(mesh):
+            with axis_rules(rules):
+                t1, _ = jax.jit(step_2)(astate2, batch)
+        ring = jax.tree.leaves(t1["mailbox"])[0]
+        assert ring.shape[:2] == (2, 4), ring.shape
+        assert float(jnp.abs(ring[0]).max()) == 0.0  # still the cold bank
+        assert float(jnp.abs(ring[1]).max()) > 0     # fresh publication
+        # step-1 params agree with staleness-1 (both consumed a zero bank)
+        dk = max(float(jnp.abs(a - b).max()) for a, b in zip(
+            jax.tree.leaves(t1["params"]), jax.tree.leaves(s1["params"])))
+        assert dk == 0.0, dk
         print("OK")
         """
     )
