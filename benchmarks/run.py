@@ -23,6 +23,7 @@ def main() -> None:
         fig4_scaling,
         fig5_compression,
         fig6_sync_async,
+        fig7_faults_coldstart,
         roofline,
         table1_resource_stages,
         table2_3_cost,
@@ -36,6 +37,7 @@ def main() -> None:
         "fig4": fig4_scaling,
         "fig5": fig5_compression,
         "fig6": fig6_sync_async,
+        "fig7": fig7_faults_coldstart,
         "roofline": roofline,
     }
     if args.only:

@@ -18,8 +18,9 @@ from repro.core.cost import (
     paper_table2_row,
     paper_table3_row,
 )
+from repro.core.events import RuntimeConfig, available_allocations
 from repro.core.exchange import ExchangeContext, available_exchanges, get_exchange
-from repro.core.serverless import ServerlessPlanner
+from repro.core.serverless import ServerlessExecutor, ServerlessPlanner
 
 
 def main():
@@ -57,6 +58,24 @@ def main():
         )
         print(f"{name:16s} {cc.wire_bytes_per_step/1e6:>8.1f} MB/step "
               f"{cc.seconds_per_step:>7.2f} s/step  ${cc.usd_per_step:.4f}/step egress")
+
+    print("\n=== Runtime engine: faults, cold starts, allocation policies ===")
+    # 30 one-second batches on a 50 MB model, 4 epochs per scenario
+    per_batch = [1.0 + 0.02 * i for i in range(30)]
+    for label, runtime, alloc in (
+        ("ideal / static", RuntimeConfig(), "static"),
+        ("aws / static", RuntimeConfig.aws_default(), "static"),
+        ("aws / latency", RuntimeConfig.aws_default(), "latency"),
+    ):
+        ex = ServerlessExecutor(runtime=runtime, allocation=alloc)
+        rep = None
+        for epoch in range(4):
+            rep = ex.simulate(per_batch, model_bytes=int(50e6),
+                              batch_bytes=int(4e6), epoch=epoch)
+        print(f"{label:16s} epoch3: {rep.lambda_memory_mb:>5}MB "
+              f"wall={rep.wall_time_s:6.2f}s cold={rep.num_cold_starts} "
+              f"retries={rep.num_retries} ${rep.cost_usd:.6f}/peer/epoch")
+    print(f"(allocation policies registered: {', '.join(available_allocations())})")
 
     print("\n=== TPU equivalent: cost/step of the serverless-P2P train step ===")
     # Using the roofline collective-bound estimate for qwen2.5-3b train_4k:

@@ -11,7 +11,7 @@ import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import get_config
-from repro.core import LocalP2PCluster, ServerlessExecutor
+from repro.core import LocalP2PCluster, RuntimeConfig, ServerlessExecutor
 from repro.data import make_dataset
 from repro.optim import sgd
 
@@ -28,7 +28,11 @@ def main():
         lr=0.05,
         sync=True,  # RabbitMQ barrier semantics
         exchange="allgather_mean",  # any name in repro.core.available_exchanges()
-        executor=ServerlessExecutor(backend="serverless"),  # Lambda fan-out
+        executor=ServerlessExecutor(  # Lambda fan-out on the event engine
+            backend="serverless",
+            runtime=RuntimeConfig.aws_default(),  # cold starts, rare faults
+            allocation="latency",  # dynamic per-epoch memory sizing
+        ),
     )
     print(f"exchange={cluster.protocol.name}: {cluster.comm_cost().summary()}")
     history = cluster.run(epochs=3)
@@ -45,13 +49,14 @@ def main():
         print(f"{stage:24s} time={row['time_s']:.3f}s cpu={row['cpu_percent']:.0f}% "
               f"mem={row['memory_mb']:.0f}MB")
 
-    rep = cluster.peers[0].reports[0]
-    print(
-        f"\nserverless execution: {rep.num_batches} lambdas x "
-        f"{rep.lambda_memory_mb}MB, wall {rep.wall_time_s:.2f}s "
-        f"(sequential compute was {rep.measured_compute_s:.2f}s), "
-        f"cost ${rep.cost_usd:.6f}/peer/epoch"
-    )
+    for rep in cluster.peers[0].reports:
+        print(
+            f"\nepoch {rep.epoch} serverless execution: {rep.num_batches} lambdas x "
+            f"{rep.lambda_memory_mb}MB, wall {rep.wall_time_s:.2f}s "
+            f"(sequential compute was {rep.measured_compute_s:.2f}s), "
+            f"cold_starts={rep.num_cold_starts} retries={rep.num_retries} "
+            f"cost ${rep.cost_usd:.6f}/peer/epoch"
+        )
 
 
 if __name__ == "__main__":

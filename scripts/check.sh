@@ -18,6 +18,8 @@ for n in available_exchanges():
 "
   echo "== smoke: paper cost tables (Tables II/III) =="
   python -m benchmarks.run --only table2_3
+  echo "== smoke: serverless runtime fault sweep (Fig. 7) =="
+  python -m benchmarks.run --only fig7
 }
 
 if [[ "${1:-}" == "--fast" ]]; then

@@ -23,8 +23,20 @@ from repro.core.convergence import (
     ReduceLROnPlateau,
 )
 from repro.core.cost import CommCost, InstanceCost, ServerlessCost, TPUCost
+from repro.core.events import (
+    AllocationPolicy,
+    EventEngine,
+    FanoutResult,
+    InvocationRecord,
+    RuntimeConfig,
+    ServerlessRuntime,
+    available_allocations,
+    get_allocation,
+    register_allocation,
+)
 from repro.core.mailbox import HostMailbox
 from repro.core.serverless import (
+    ExecutionReport,
     ServerlessExecutor,
     ServerlessPlanner,
     StepFunctionPlan,
@@ -55,7 +67,17 @@ __all__ = [
     "InstanceCost",
     "ServerlessCost",
     "TPUCost",
+    "AllocationPolicy",
+    "EventEngine",
+    "FanoutResult",
+    "InvocationRecord",
+    "RuntimeConfig",
+    "ServerlessRuntime",
+    "available_allocations",
+    "get_allocation",
+    "register_allocation",
     "HostMailbox",
+    "ExecutionReport",
     "ServerlessExecutor",
     "ServerlessPlanner",
     "StepFunctionPlan",

@@ -43,26 +43,42 @@ def lambda_cost_per_second(memory_mb: int) -> float:
 
 @dataclass(frozen=True)
 class ServerlessCost:
+    """Paper formula (1) plus full invocation billing.
+
+    Beyond the paper's ``(lambda_s * m + ec2_s) * T``, the runtime engine
+    threads through what real Lambda bills: the per-request fee for every
+    invocation *including retries*, the GB-seconds burned by failed
+    attempts that re-executed, and cold-start init time.
+    """
+
     compute_time_s: float
     num_batches: int
     lambda_memory_mb: int
     instance: str = "t2.small"
-    include_request_fee: bool = False
+    include_request_fee: bool = True  # bill every invocation, like AWS does
+    num_retries: int = 0  # re-invocations after failures/timeouts
+    retry_billed_s: float = 0.0  # Lambda seconds burned by failed attempts
+    cold_start_billed_s: float = 0.0  # container init time billed as GB-s
 
     @property
     def lambda_cost_s(self) -> float:
         return lambda_cost_per_second(self.lambda_memory_mb)
 
     @property
+    def request_fee_usd(self) -> float:
+        if not self.include_request_fee:
+            return 0.0
+        return LAMBDA_USD_PER_REQUEST * (self.num_batches + self.num_retries)
+
+    @property
     def cost_per_peer(self) -> float:
-        """Paper formula (1)."""
+        """Formula (1) + retry re-execution + cold-start GB-s + request fees."""
         c = (
             self.lambda_cost_s * self.num_batches
             + ec2_cost_per_second(self.instance)
         ) * self.compute_time_s
-        if self.include_request_fee:
-            c += LAMBDA_USD_PER_REQUEST * self.num_batches
-        return c
+        c += self.lambda_cost_s * (self.retry_billed_s + self.cold_start_billed_s)
+        return c + self.request_fee_usd
 
 
 @dataclass(frozen=True)

@@ -1,0 +1,507 @@
+"""Unified discrete-event ServerlessRuntime — the time model under both
+serverless execution paths.
+
+Before this module existed the repo carried two divergent time models: the
+closed-form accounting in ``ServerlessExecutor.run`` (``max(batch_time /
+speedup) + fixed overheads``) and an ad-hoc heapq loop inside
+``LocalP2PCluster.run_epoch_async``. Neither could express what real
+serverless training is dominated by (arXiv:2105.07806): cold starts,
+invocation-level variance, concurrency throttling, and failures
+(arXiv:2309.14148, SPIRT). This module replaces both with one seeded
+discrete-event engine plus a runtime layered on top of it:
+
+* :class:`EventEngine` — a deterministic event heap ordered by
+  ``(time, priority, insertion seq)``. The priority slot reproduces the old
+  async loop's ``(clock, rank)`` tie-breaking bit-for-bit.
+* :class:`RuntimeConfig` — the fault/cold-start/concurrency knobs. The
+  default config is *ideal* (no faults, no cold starts, unbounded
+  concurrency) and reproduces the old analytic wall-times exactly;
+  :meth:`RuntimeConfig.aws_default` is a realistic Lambda preset.
+* :class:`ServerlessRuntime` — simulates a per-peer Lambda fan-out on the
+  engine: warm-container reuse pools keyed by ``(function, memory tier)``,
+  concurrency caps with FIFO queueing, per-attempt failures retried with
+  exponential backoff, and seeded straggler tail latency. Emits
+  per-invocation :class:`InvocationRecord` stage timings (queue wait /
+  cold start / retry) that feed ``StageMetrics``, ``ExecutionReport`` and
+  ``ServerlessCost``.
+* :class:`AllocationPolicy` registry — pluggable per-epoch Lambda memory
+  re-sizing from the previous epoch's measured per-batch times: the
+  paper's "dynamic resource allocation" made concrete. Mirrors the
+  ``ExchangeProtocol`` registry pattern.
+
+The module is dependency-light on purpose (numpy + stdlib): it knows
+nothing about JAX, gradients, or dollars — callers translate.
+"""
+from __future__ import annotations
+
+import abc
+import heapq
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Type
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Event engine
+# ---------------------------------------------------------------------------
+
+
+class EventEngine:
+    """Deterministic discrete-event scheduler.
+
+    Events fire in ``(time, priority, insertion order)`` order; callbacks
+    may schedule further events. ``rng`` is a seeded numpy Generator shared
+    by every stochastic model riding on the engine, so a fixed seed fixes
+    the whole simulation.
+    """
+
+    def __init__(self, *, seed: int = 0, rng: Optional[np.random.Generator] = None):
+        self.now = 0.0
+        self.processed = 0
+        self.rng = rng if rng is not None else np.random.default_rng(seed)
+        self._heap: List[Tuple[float, int, int, Callable[[], None]]] = []
+        self._seq = 0
+
+    def schedule_at(self, time: float, fn: Callable[[], None], *, priority: int = 0):
+        """Schedule ``fn`` at absolute ``time`` (clamped to not run in the past)."""
+        heapq.heappush(self._heap, (max(float(time), self.now), priority, self._seq, fn))
+        self._seq += 1
+
+    def schedule_in(self, delay: float, fn: Callable[[], None], *, priority: int = 0):
+        self.schedule_at(self.now + delay, fn, priority=priority)
+
+    def reset(self, now: float = 0.0):
+        """Rewind the clock between independent simulation rounds."""
+        if self._heap:
+            raise RuntimeError("cannot reset an engine with pending events")
+        self.now = float(now)
+
+    def run(self) -> float:
+        """Process events until the heap drains; returns the final clock."""
+        while self._heap:
+            t, _, _, fn = heapq.heappop(self._heap)
+            self.now = t
+            self.processed += 1
+            fn()
+        return self.now
+
+
+# ---------------------------------------------------------------------------
+# Runtime configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RuntimeConfig:
+    """Fault/cold-start/concurrency model of the simulated Lambda service.
+
+    The zero-argument default is the *ideal* runtime — no cold starts, no
+    failures, no stragglers, unbounded concurrency — under which the engine
+    reproduces the legacy closed-form accounting exactly (see the
+    equivalence tests). Every effect is opt-in.
+    """
+
+    concurrency_limit: Optional[int] = None  # None = unbounded fan-out
+    cold_start_s: float = 0.0  # container init time added to a cold invocation
+    container_keepalive_s: float = 900.0  # warm pool idle TTL
+    failure_rate: float = 0.0  # P(an attempt fails)
+    failure_runtime_frac: float = 1.0  # fraction of the attempt burned before failing
+    max_retries: int = 4  # retry budget per invocation
+    retry_backoff_s: float = 0.5  # backoff = base * 2**(attempt-1)
+    straggler_prob: float = 0.0  # P(invocation draws a tail latency)
+    straggler_slowdown: float = 3.0  # mean extra slowdown (exponential tail)
+    seed: int = 0
+
+    @staticmethod
+    def ideal() -> "RuntimeConfig":
+        return RuntimeConfig()
+
+    @staticmethod
+    def aws_default() -> "RuntimeConfig":
+        """Realistic Lambda figures: 1000 default account concurrency,
+        seconds-scale cold starts, rare crashes, occasional stragglers."""
+        return RuntimeConfig(
+            concurrency_limit=1000,
+            cold_start_s=2.5,
+            failure_rate=0.005,
+            straggler_prob=0.02,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Per-invocation records
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class InvocationRecord:
+    """Stage-level timing of one simulated Lambda invocation."""
+
+    index: int
+    memory_mb: int
+    submit_s: float
+    start_s: float = 0.0  # first attempt's start
+    end_s: float = 0.0  # successful completion
+    exec_s: float = 0.0  # successful attempt's execution (incl. straggler factor)
+    queue_wait_s: float = 0.0  # total time spent throttled, all attempts
+    cold_start_s: float = 0.0  # container init time burned, all attempts
+    cold_starts: int = 0
+    straggler_factor: float = 1.0
+    attempts: int = 0
+    retries: int = 0
+    backoff_s: float = 0.0  # total backoff waiting between attempts
+    failed_s: float = 0.0  # post-init execution burned by failed attempts
+    billed_s: float = 0.0  # Lambda-billed seconds across all attempts
+
+
+@dataclass
+class FanoutResult:
+    """Outcome of one fan-out (one peer epoch) on the runtime."""
+
+    makespan_s: float  # submit -> last completion
+    memory_mb: int
+    invocations: List[InvocationRecord]
+
+    @property
+    def num_cold_starts(self) -> int:
+        return sum(r.cold_starts for r in self.invocations)
+
+    @property
+    def num_retries(self) -> int:
+        return sum(r.retries for r in self.invocations)
+
+    @property
+    def cold_start_s_total(self) -> float:
+        return sum(r.cold_start_s for r in self.invocations)
+
+    @property
+    def queue_wait_s_total(self) -> float:
+        return sum(r.queue_wait_s for r in self.invocations)
+
+    @property
+    def retry_s_total(self) -> float:
+        """Time burned recovering from failures: dead work + backoff."""
+        return sum(r.failed_s + r.backoff_s for r in self.invocations)
+
+    @property
+    def billed_s_total(self) -> float:
+        return sum(r.billed_s for r in self.invocations)
+
+    @property
+    def max_exec_s(self) -> float:
+        return max((r.exec_s for r in self.invocations), default=0.0)
+
+
+class FanoutTimeout(RuntimeError):
+    """An invocation exhausted its retry budget against the hard timeout."""
+
+
+# ---------------------------------------------------------------------------
+# Warm-container pool
+# ---------------------------------------------------------------------------
+
+
+class _ContainerPool:
+    """Warm containers keyed by (function, memory tier), AWS-style LIFO reuse.
+
+    A container freed at ``t0`` can serve a new invocation at ``t`` iff
+    ``t0 <= t <= t0 + keepalive``. Changing the memory tier (dynamic
+    allocation) strands the old tier's pool — re-sizing pays cold starts
+    again, which is exactly the trade-off an AllocationPolicy navigates.
+    """
+
+    def __init__(self, keepalive_s: float):
+        self.keepalive_s = keepalive_s
+        self._idle: Dict[Tuple[Any, int], List[float]] = {}
+
+    def acquire(self, key: Tuple[Any, int], at: float) -> bool:
+        """True -> warm container reused; False -> cold start."""
+        idle = self._idle.get(key, [])
+        # prune expired, then take the most recently used warm container
+        idle = [t for t in idle if at - t <= self.keepalive_s]
+        best = None
+        for i, t in enumerate(idle):
+            if t <= at and (best is None or t > idle[best]):
+                best = i
+        if best is None:
+            self._idle[key] = idle
+            return False
+        idle.pop(best)
+        self._idle[key] = idle
+        return True
+
+    def release(self, key: Tuple[Any, int], at: float):
+        self._idle.setdefault(key, []).append(at)
+
+
+# ---------------------------------------------------------------------------
+# ServerlessRuntime
+# ---------------------------------------------------------------------------
+
+
+class ServerlessRuntime:
+    """Simulates Lambda fan-outs on the event engine.
+
+    One runtime instance persists warm pools and the RNG stream across
+    fan-outs (epochs), so container reuse and fault sampling behave like a
+    long-lived deployment; a fixed ``RuntimeConfig.seed`` makes the whole
+    trajectory deterministic.
+    """
+
+    def __init__(self, config: Optional[RuntimeConfig] = None):
+        self.config = config or RuntimeConfig()
+        self.rng = np.random.default_rng(self.config.seed)
+        self.pool = _ContainerPool(self.config.container_keepalive_s)
+        self.fanouts_run = 0
+        self.clock = 0.0  # deployment-lifetime clock; warm pools live on it
+
+    def fanout(
+        self,
+        exec_times_s: Sequence[float],
+        *,
+        memory_mb: int,
+        function_key: Any = 0,
+        invoke_overhead_s: float = 0.0,
+        timeout_s: Optional[float] = None,
+        submit_time: Optional[float] = None,
+    ) -> FanoutResult:
+        """Simulate one fan-out of ``len(exec_times_s)`` invocations.
+
+        ``exec_times_s`` are warm, straggler-free execution times (already
+        scaled to the memory tier's vCPU share). ``submit_time`` defaults
+        to the runtime's own clock, which advances past each fan-out — so
+        containers freed by one epoch are warm (within the keepalive TTL)
+        for the next. Returns the makespan and per-invocation stage
+        records; all record times are absolute on the runtime clock.
+        """
+        cfg = self.config
+        if submit_time is None:
+            submit_time = self.clock
+        engine = EventEngine(rng=self.rng)
+        engine.now = float(submit_time)
+        key = (function_key, int(memory_mb))
+        records = [
+            InvocationRecord(index=i, memory_mb=int(memory_mb), submit_s=submit_time)
+            for i in range(len(exec_times_s))
+        ]
+        capacity = cfg.concurrency_limit or math.inf
+        state = {"running": 0, "last_end": submit_time}
+        waiting: deque = deque()  # FIFO throttle queue of (index, enqueue time)
+
+        def try_start(i: int):
+            if state["running"] < capacity:
+                state["running"] += 1
+                start_attempt(i)
+            else:
+                waiting.append((i, engine.now))
+
+        def release_slot():
+            state["running"] -= 1
+            if waiting:
+                i, t_enq = waiting.popleft()
+                records[i].queue_wait_s += engine.now - t_enq
+                state["running"] += 1
+                start_attempt(i)
+
+        def start_attempt(i: int):
+            rec = records[i]
+            rec.attempts += 1
+            if rec.attempts == 1:
+                rec.start_s = engine.now
+                if cfg.straggler_prob > 0.0 and engine.rng.random() < cfg.straggler_prob:
+                    rec.straggler_factor = 1.0 + engine.rng.exponential(
+                        cfg.straggler_slowdown
+                    )
+            cold = not self.pool.acquire(key, engine.now)
+            init_s = cfg.cold_start_s if cold else 0.0
+            if cold:
+                rec.cold_starts += 1
+            exec_s = exec_times_s[i] * rec.straggler_factor
+            duration = init_s + invoke_overhead_s + exec_s
+            out_of_retries = rec.attempts > cfg.max_retries
+            timed_out = timeout_s is not None and duration > timeout_s
+            failed = timed_out or (
+                cfg.failure_rate > 0.0
+                and not out_of_retries
+                and engine.rng.random() < cfg.failure_rate
+            )
+            if failed and timed_out and out_of_retries:
+                raise FanoutTimeout(
+                    f"invocation {i} still exceeds the {timeout_s:.0f}s timeout "
+                    f"after {cfg.max_retries} retries on a {memory_mb}MB function"
+                )
+            if failed:
+                run_for = min(
+                    duration * cfg.failure_runtime_frac,
+                    timeout_s if timed_out else duration,
+                )
+                # split the burn so cold_start_s and failed_s partition the
+                # attempt's time (no double-billing downstream): init burns
+                # first, whatever remains was dead execution
+                burned_init = min(run_for, init_s)
+                rec.cold_start_s += burned_init
+                rec.failed_s += run_for - burned_init
+                rec.billed_s += run_for
+                rec.retries += 1
+                backoff = cfg.retry_backoff_s * (2.0 ** (rec.attempts - 1))
+                rec.backoff_s += backoff
+                # a crashed/timed-out container is not returned to the pool
+                # the slot frees when the attempt dies; the retry re-enters
+                # admission (FIFO) after its backoff
+                engine.schedule_at(engine.now + run_for, release_slot)
+                engine.schedule_at(engine.now + run_for + backoff, lambda i=i: try_start(i))
+                # a straggler that burned its retry budget against the hard
+                # timeout is forced back to nominal speed so the redo can fit
+                if timed_out and rec.attempts >= cfg.max_retries:
+                    rec.straggler_factor = 1.0
+                return
+            rec.cold_start_s += init_s
+            rec.exec_s = exec_s
+            rec.billed_s += duration
+
+            def complete(i=i, duration=duration):
+                rec = records[i]
+                rec.end_s = engine.now
+                state["last_end"] = max(state["last_end"], engine.now)
+                self.pool.release(key, engine.now)
+                release_slot()
+
+            engine.schedule_at(engine.now + duration, complete)
+
+        for i in range(len(exec_times_s)):
+            engine.schedule_at(submit_time, lambda i=i: try_start(i))
+        engine.run()
+        self.fanouts_run += 1
+        self.clock = max(self.clock, state["last_end"])
+        return FanoutResult(
+            makespan_s=state["last_end"] - submit_time,
+            memory_mb=int(memory_mb),
+            invocations=records,
+        )
+
+
+# ---------------------------------------------------------------------------
+# AllocationPolicy registry (mirrors the ExchangeProtocol registry)
+# ---------------------------------------------------------------------------
+
+
+class AllocationPolicy(abc.ABC):
+    """Per-epoch Lambda memory sizing — the paper's "dynamic resource
+    allocation" as a pluggable policy.
+
+    ``memory_mb`` sees the planner's static minimum (the smallest tier the
+    model fits in) and the peer's fan-out history, and returns a memory
+    suggestion; the executor clamps it to ``[planned_mb, LAMBDA cap]`` and
+    rounds to the 64 MB tier grid. Lambda vCPU share scales linearly with
+    memory, so raising memory buys wall-time at a dollar premium — the
+    paper's headline time/cost trade-off.
+    """
+
+    name: str = "?"  # set by @register_allocation
+
+    @abc.abstractmethod
+    def memory_mb(
+        self, *, epoch: int, planned_mb: int, history: Sequence[FanoutResult]
+    ) -> int:
+        """Return the memory size for this epoch's fan-out."""
+
+    def describe(self) -> str:
+        return (self.__doc__ or "").strip().splitlines()[0] if self.__doc__ else ""
+
+
+_ALLOC_REGISTRY: Dict[str, Type[AllocationPolicy]] = {}
+
+
+def register_allocation(name: str):
+    """Class decorator: make a policy reachable by name everywhere."""
+
+    def deco(cls: Type[AllocationPolicy]) -> Type[AllocationPolicy]:
+        if not issubclass(cls, AllocationPolicy):
+            raise TypeError(f"{cls!r} must subclass AllocationPolicy")
+        cls.name = name
+        _ALLOC_REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def available_allocations() -> Tuple[str, ...]:
+    return tuple(sorted(_ALLOC_REGISTRY))
+
+
+def get_allocation(name: str, **kwargs) -> AllocationPolicy:
+    try:
+        cls = _ALLOC_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown allocation policy {name!r}; registered policies: "
+            f"{', '.join(available_allocations())}"
+        ) from None
+    return cls(**kwargs)
+
+
+@register_allocation("static")
+class StaticAllocation(AllocationPolicy):
+    """The planner's static minimum-fit memory, every epoch (paper-faithful)."""
+
+    def memory_mb(self, *, epoch, planned_mb, history):
+        return planned_mb
+
+
+@register_allocation("latency")
+class LatencyTargetAllocation(AllocationPolicy):
+    """Multiplicative sizing to hit a per-batch latency target.
+
+    Lambda compute scales ~linearly with memory, so if the previous epoch's
+    slowest batch ran in ``t`` seconds at ``m`` MB, hitting ``target``
+    needs ``m * t / target`` MB. Shrinks (never below the planner's fit
+    floor) when comfortably under target, trading wall-time back for cost.
+    """
+
+    def __init__(self, target_batch_s: float = 1.0, shrink_threshold: float = 0.6):
+        self.target_batch_s = target_batch_s
+        self.shrink_threshold = shrink_threshold
+
+    def memory_mb(self, *, epoch, planned_mb, history):
+        if not history:
+            return planned_mb
+        prev = history[-1]
+        worst = prev.max_exec_s
+        if worst <= 0.0:
+            return prev.memory_mb
+        if worst > self.target_batch_s or worst < self.shrink_threshold * self.target_batch_s:
+            return int(round(prev.memory_mb * worst / self.target_batch_s))
+        return prev.memory_mb
+
+
+@register_allocation("aimd")
+class AIMDAllocation(AllocationPolicy):
+    """Additive-increase / multiplicative-decrease around a latency target.
+
+    Conservative: grows one fixed step when the previous epoch missed the
+    target (or paid retries), decays by ``decrease`` when comfortably
+    under it. Converges near the cheapest tier that meets the target.
+    """
+
+    def __init__(
+        self,
+        target_batch_s: float = 1.0,
+        increase_mb: int = 1024,
+        decrease: float = 0.8,
+    ):
+        self.target_batch_s = target_batch_s
+        self.increase_mb = increase_mb
+        self.decrease = decrease
+
+    def memory_mb(self, *, epoch, planned_mb, history):
+        if not history:
+            return planned_mb
+        prev = history[-1]
+        if prev.max_exec_s > self.target_batch_s or prev.num_retries > 0:
+            return prev.memory_mb + self.increase_mb
+        if prev.max_exec_s < 0.5 * self.target_batch_s:
+            return int(round(prev.memory_mb * self.decrease))
+        return prev.memory_mb

@@ -19,6 +19,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 MESSAGE_CAP_BYTES = 100 * 1024 * 1024  # Amazon MQ per-message limit
+S3_ROUND_TRIP_S = 0.05  # fetch-by-UUID latency for indirected payloads
 
 
 @dataclass
@@ -26,6 +27,7 @@ class Message:
     payload: Any
     publish_time: float
     epoch: int
+    nbytes: int = 0  # wire size, charged to the consumer's simulated link
     via_s3: bool = False
     s3_uuid: Optional[str] = None
 
@@ -33,8 +35,9 @@ class Message:
 class HostMailbox:
     """One latest-wins queue per peer + a synchronization barrier queue."""
 
-    def __init__(self, num_peers: int):
+    def __init__(self, num_peers: int, *, s3_rtt_s: float = S3_ROUND_TRIP_S):
         self.num_peers = num_peers
+        self.s3_rtt_s = s3_rtt_s
         self._queues: List[Optional[Message]] = [None] * num_peers
         self._barrier: List[Tuple[int, int]] = []  # (peer, epoch) completions
         self.stats = {"publishes": 0, "consumes": 0, "s3_indirections": 0}
@@ -43,13 +46,22 @@ class HostMailbox:
     def publish(self, peer: int, payload: Any, *, nbytes: int, time: float, epoch: int):
         via_s3 = nbytes > MESSAGE_CAP_BYTES
         msg = Message(
-            payload, time, epoch,
+            payload, time, epoch, nbytes=nbytes,
             via_s3=via_s3, s3_uuid=str(uuid.uuid4()) if via_s3 else None,
         )
         self._queues[peer] = msg  # replaces the previous message (latest wins)
         self.stats["publishes"] += 1
         if via_s3:
             self.stats["s3_indirections"] += 1
+
+    def download_time_s(self, msg: Message, bandwidth_bps: float) -> float:
+        """Receive-side wire time: payload transfer + the S3 fetch round trip
+        for indirected (>100 MB) messages. Charged against the consumer's
+        simulated link by the cluster / event engine."""
+        t = msg.nbytes * 8.0 / bandwidth_bps
+        if msg.via_s3:
+            t += self.s3_rtt_s
+        return t
 
     def consume(self, peer: int, *, at_time: Optional[float] = None) -> Optional[Message]:
         """Read (without deleting) peer's latest message visible at `at_time`."""

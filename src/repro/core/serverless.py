@@ -16,13 +16,22 @@ Two halves:
       overheads.
   On the TPU path the fan-out is not simulated at all — it is the lambda
   mesh axis (see repro/core/p2p.py::lambda_shard).
+
+Since the ServerlessRuntime refactor the executor no longer owns a time
+model: wall-clock comes from a discrete-event fan-out simulation on
+:class:`repro.core.events.ServerlessRuntime` (cold/warm container pools,
+concurrency caps, retries, stragglers), and per-epoch memory sizing is
+delegated to a pluggable :class:`repro.core.events.AllocationPolicy`.
+The default :class:`repro.core.events.RuntimeConfig` is ideal (no faults,
+no cold starts, unbounded concurrency) and reproduces the legacy analytic
+accounting to float precision.
 """
 from __future__ import annotations
 
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
@@ -33,12 +42,26 @@ from repro.core.cost import (
     ec2_cost_per_second,
     lambda_cost_per_second,
 )
+from repro.core.events import (
+    AllocationPolicy,
+    FanoutResult,
+    InvocationRecord,
+    RuntimeConfig,
+    ServerlessRuntime,
+    get_allocation,
+)
 
 LAMBDA_MAX_MEMORY_MB = 10_240  # AWS cap (paper §III-A)
 LAMBDA_TIMEOUT_S = 15 * 60
 LAMBDA_MB_PER_VCPU = 1_769  # AWS: 1 vCPU per 1769 MB
 DEPLOY_ZIP_CAP_MB = 50
 DEPLOY_UNZIPPED_CAP_MB = 250
+
+
+def lambda_speedup(memory_mb: int, instance_vcpus: float) -> float:
+    """Lambda vCPU share relative to the baseline instance (floored at 0.25:
+    even tiny functions make some progress)."""
+    return max((memory_mb / LAMBDA_MB_PER_VCPU) / instance_vcpus, 0.25)
 
 
 @dataclass(frozen=True)
@@ -113,7 +136,7 @@ class ServerlessPlanner:
         mem = self.lambda_memory_mb(model_bytes, batch_bytes)
         spec = LambdaSpec(
             memory_mb=mem,
-            speedup_vs_instance=max((mem / LAMBDA_MB_PER_VCPU) / instance_vcpus, 0.25),
+            speedup_vs_instance=lambda_speedup(mem, instance_vcpus),
         )
         keys = tuple(batch_keys or (f"batch-{i:05d}" for i in range(num_batches)))
         return StepFunctionPlan(num_batches, spec, keys)
@@ -128,10 +151,27 @@ class ExecutionReport:
     num_batches: int
     lambda_memory_mb: int = 0
     cost_usd: float = 0.0
+    # -- runtime-engine accounting (serverless backend) ---------------------
+    epoch: int = 0
+    num_cold_starts: int = 0
+    cold_start_s: float = 0.0  # total container init time across invocations
+    queue_wait_s: float = 0.0  # total concurrency-throttle wait
+    num_retries: int = 0
+    retry_s: float = 0.0  # dead work + backoff recovering from failures
+    billed_lambda_s: float = 0.0  # Lambda-billed seconds across all attempts
+    request_fee_usd: float = 0.0  # per-request fee incl. retried invocations
+    invocations: List[InvocationRecord] = field(default_factory=list)
 
 
 class ServerlessExecutor:
-    """Runs per-batch gradient thunks and accounts time/cost per backend."""
+    """Runs per-batch gradient thunks; time/cost comes from the runtime engine.
+
+    ``run`` measures the real per-batch compute, then hands the measured
+    times to :meth:`simulate`, which prices them under the configured
+    :class:`~repro.core.events.ServerlessRuntime` (cold starts, concurrency
+    queueing, retries, stragglers) with the Lambda memory chosen per epoch
+    by the :class:`~repro.core.events.AllocationPolicy`.
+    """
 
     def __init__(
         self,
@@ -142,6 +182,8 @@ class ServerlessExecutor:
         instance_vcpus: float = 1.0,
         invoke_overhead_s: float = 0.15,  # warm-start + S3 batch fetch
         orchestration_overhead_s: float = 0.30,  # Step Functions state machine
+        runtime: Union[RuntimeConfig, ServerlessRuntime, None] = None,
+        allocation: Union[str, AllocationPolicy] = "static",
     ):
         assert backend in ("serverless", "instance")
         self.backend = backend
@@ -150,6 +192,96 @@ class ServerlessExecutor:
         self.instance_vcpus = instance_vcpus
         self.invoke_overhead_s = invoke_overhead_s
         self.orchestration_overhead_s = orchestration_overhead_s
+        if isinstance(runtime, ServerlessRuntime):
+            self.runtime = runtime
+        else:
+            self.runtime = ServerlessRuntime(runtime)
+        if isinstance(allocation, str):
+            allocation = get_allocation(allocation)
+        self.allocation: AllocationPolicy = allocation
+        # per-peer fan-out history, the allocation policy's observation stream
+        self.history: Dict[Any, List[FanoutResult]] = {}
+
+    # ------------------------------------------------------------------
+    def _memory_mb(self, planned_mb: int, epoch: int, peer: Any) -> int:
+        """Policy suggestion clamped to [fit floor, Lambda cap], 64 MB tiers."""
+        mem = self.allocation.memory_mb(
+            epoch=epoch, planned_mb=planned_mb, history=self.history.get(peer, ()),
+        )
+        mem = max(planned_mb, min(int(mem), LAMBDA_MAX_MEMORY_MB))
+        return int(math.ceil(mem / 64.0) * 64)
+
+    def simulate(
+        self,
+        per_batch_s: Sequence[float],
+        *,
+        model_bytes: int,
+        batch_bytes: int,
+        epoch: Optional[int] = None,
+        peer: Any = 0,
+    ) -> ExecutionReport:
+        """Account measured instance-side batch times under the runtime.
+
+        This is the accounting half of :meth:`run`, usable on its own when
+        the math already happened elsewhere (e.g. on the TPU lambda axis:
+        ``P2PTrainer.account_serverless``).
+        """
+        per_batch = [float(t) for t in per_batch_s]
+        measured = float(sum(per_batch))
+        if epoch is None:
+            epoch = len(self.history.get(peer, ()))
+        plan = self.planner.plan(
+            model_bytes=model_bytes,
+            batch_bytes=batch_bytes,
+            num_batches=len(per_batch),
+            instance_vcpus=self.instance_vcpus,
+        )
+        mem = self._memory_mb(plan.lambda_spec.memory_mb, epoch, peer)
+        speed = lambda_speedup(mem, self.instance_vcpus)
+        lam_times = [t / speed + self.invoke_overhead_s for t in per_batch]
+        if lam_times and max(lam_times) > LAMBDA_TIMEOUT_S:
+            raise ValueError(
+                f"a batch needs {max(lam_times):.0f}s on a "
+                f"{mem}MB Lambda — exceeds the "
+                f"{LAMBDA_TIMEOUT_S}s cap (paper §III-A); shrink the batch "
+                "or raise memory"
+            )
+        res = self.runtime.fanout(
+            [t / speed for t in per_batch],
+            memory_mb=mem,
+            function_key=peer,
+            invoke_overhead_s=self.invoke_overhead_s,
+            timeout_s=LAMBDA_TIMEOUT_S,
+        )
+        self.history.setdefault(peer, []).append(res)
+        wall = self.orchestration_overhead_s + res.makespan_s
+        cost = ServerlessCost(
+            compute_time_s=wall,
+            num_batches=len(per_batch),
+            lambda_memory_mb=mem,
+            instance=self.instance,
+            num_retries=res.num_retries,
+            retry_billed_s=sum(r.failed_s for r in res.invocations),
+            cold_start_billed_s=res.cold_start_s_total,
+        )
+        return ExecutionReport(
+            backend="serverless",
+            wall_time_s=wall,
+            measured_compute_s=measured,
+            per_batch_s=per_batch,
+            num_batches=len(per_batch),
+            lambda_memory_mb=mem,
+            cost_usd=cost.cost_per_peer,
+            epoch=epoch,
+            num_cold_starts=res.num_cold_starts,
+            cold_start_s=res.cold_start_s_total,
+            queue_wait_s=res.queue_wait_s_total,
+            num_retries=res.num_retries,
+            retry_s=res.retry_s_total,
+            billed_lambda_s=res.billed_s_total,
+            request_fee_usd=cost.request_fee_usd,
+            invocations=res.invocations,
+        )
 
     def run(
         self,
@@ -158,6 +290,8 @@ class ServerlessExecutor:
         model_bytes: int,
         batch_bytes: int,
         combine: Callable[[List[Any]], Any],
+        epoch: Optional[int] = None,
+        peer: Any = 0,
     ) -> Tuple[Any, ExecutionReport]:
         """Execute every thunk (exact math), account wall time per backend."""
         results: List[Any] = []
@@ -182,35 +316,11 @@ class ServerlessExecutor:
             )
             return g, report
 
-        plan = self.planner.plan(
+        report = self.simulate(
+            per_batch,
             model_bytes=model_bytes,
             batch_bytes=batch_bytes,
-            num_batches=len(per_batch),
-            instance_vcpus=self.instance_vcpus,
-        )
-        speed = plan.lambda_spec.speedup_vs_instance
-        lam_times = [t / speed + self.invoke_overhead_s for t in per_batch]
-        if lam_times and max(lam_times) > LAMBDA_TIMEOUT_S:
-            raise ValueError(
-                f"a batch needs {max(lam_times):.0f}s on a "
-                f"{plan.lambda_spec.memory_mb}MB Lambda — exceeds the "
-                f"{LAMBDA_TIMEOUT_S}s cap (paper §III-A); shrink the batch "
-                "or raise memory"
-            )
-        wall = self.orchestration_overhead_s + (max(lam_times) if lam_times else 0.0)
-        cost = ServerlessCost(
-            compute_time_s=wall,
-            num_batches=len(per_batch),
-            lambda_memory_mb=plan.lambda_spec.memory_mb,
-            instance=self.instance,
-        ).cost_per_peer
-        report = ExecutionReport(
-            backend="serverless",
-            wall_time_s=wall,
-            measured_compute_s=measured,
-            per_batch_s=per_batch,
-            num_batches=len(per_batch),
-            lambda_memory_mb=plan.lambda_spec.memory_mb,
-            cost_usd=cost,
+            epoch=epoch,
+            peer=peer,
         )
         return g, report

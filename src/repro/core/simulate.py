@@ -7,16 +7,20 @@ Fig. 3 (serverless speedup), Fig. 4 (compute/comm scaling), Fig. 5 (QSGD),
 Fig. 6 (sync vs async convergence).
 
 Synchronous mode executes epochs in lockstep with the RabbitMQ barrier
-semantics. Asynchronous mode is a discrete-event simulation: each peer has a
-speed factor, advances its own virtual clock by its *measured* compute time
-x speed, publishes gradients at completion instants, and consumes whatever
-other-peer gradients are visible at its own clock — the paper's "latest
-available, possibly stale" behaviour, which is what destabilizes async
-convergence in Fig. 6.
+semantics. Asynchronous mode runs on the shared discrete-event
+:class:`~repro.core.events.EventEngine` (the same engine that times the
+serverless fan-out): each peer has a speed factor, advances its own virtual
+clock by its *measured* compute time x speed, publishes gradients at
+completion instants, and consumes whatever other-peer gradients are visible
+at its own clock — the paper's "latest available, possibly stale"
+behaviour, which is what destabilizes async convergence in Fig. 6. Peer
+churn (SPIRT-style, arXiv:2309.14148) rides on the engine: a peer can drop
+mid-epoch, lose its partial work, and rejoin after a downtime while the
+others keep consuming its last published gradient — well-defined because
+the mailbox is a latest-wins register.
 """
 from __future__ import annotations
 
-import heapq
 import math
 import time
 from dataclasses import dataclass, field
@@ -31,6 +35,7 @@ from repro.configs.base import ModelConfig
 from repro.core import compression as C
 from repro.core.convergence import ConvergenceDetector
 from repro.core.cost import CommCost
+from repro.core.events import EventEngine
 from repro.core.exchange import ExchangeContext, ExchangeProtocol, get_exchange
 from repro.core.mailbox import HostMailbox
 from repro.core.serverless import ExecutionReport, ServerlessExecutor
@@ -62,6 +67,8 @@ class PeerState:
     send_time_s: float = 0.0
     recv_time_s: float = 0.0
     compute_time_s: float = 0.0
+    drops: int = 0  # churn events survived (async mode)
+    downtime_s: float = 0.0  # simulated time lost to churn
     reports: List[ExecutionReport] = field(default_factory=list)
 
 
@@ -85,6 +92,8 @@ class LocalP2PCluster:
         topk_frac: float = 0.01,
         network_bandwidth_bps: float = 1e9,  # simulated inter-peer link
         peer_speeds: Optional[Sequence[float]] = None,
+        churn_prob: float = 0.0,  # async: P(peer drops mid-step), per attempt
+        churn_downtime_s: float = 1.0,  # async: rejoin delay after a drop
         seed: int = 0,
     ):
         import dataclasses as _dc
@@ -117,6 +126,13 @@ class LocalP2PCluster:
         self.mailbox = HostMailbox(num_peers)
         self.detector = ConvergenceDetector(lr, mode="max", max_epochs=10_000)
         self.key = jax.random.PRNGKey(seed)
+        self.churn_prob = churn_prob
+        self.churn_downtime_s = churn_downtime_s
+        # one RNG stream for all async-epoch stochastics (churn); the engine
+        # itself is rebuilt per epoch but shares this stream, so a fixed
+        # seed fixes the whole multi-epoch trajectory
+        self._rng = np.random.default_rng(seed)
+        self.last_event_order: List[int] = []  # rank processing order, last async epoch
 
         part = Partitioner(dataset, num_peers, shuffle_seed=seed)
         init_params = models.init_model(jax.random.PRNGKey(seed), cfg)
@@ -201,8 +217,15 @@ class LocalP2PCluster:
                 model_bytes=self._model_bytes,
                 batch_bytes=batch_bytes,
                 combine=combine,
+                epoch=epoch,
+                peer=peer.rank,
             )
             peer.reports.append(report)
+            if report.backend == "serverless":
+                # engine-simulated per-invocation stages, Table-I style
+                peer.metrics.add_simulated("cold_start", report.cold_start_s)
+                peer.metrics.add_simulated("queue_wait", report.queue_wait_s)
+                peer.metrics.add_simulated("retry", report.retry_s)
             compute_wall = report.wall_time_s
         else:
             t0 = time.perf_counter()
@@ -230,8 +253,15 @@ class LocalP2PCluster:
         return nbytes
 
     def _consume_all(self, peer: PeerState, own_grads, at_time: Optional[float]):
-        """ConsumeGradientsFromQueue for every other peer (Algorithm 1)."""
+        """ConsumeGradientsFromQueue for every other peer (Algorithm 1).
+
+        Returns ``(grads_peers, recv_wire_s)``: the consumed gradient set
+        and the receive-side wire time — payload download plus the S3
+        round trip for >100 MB indirected messages — charged against the
+        simulated link (async mode also advances the peer's clock by it).
+        """
         grads_peers = {peer.rank: own_grads}
+        recv_wire_s = 0.0
         with peer.metrics.stage("receive_gradients"):
             for other in range(self.num_peers):
                 if other == peer.rank:
@@ -243,9 +273,10 @@ class LocalP2PCluster:
                 grads_peers[other] = self.protocol.host_decode(
                     payload, own_grads, self.xctx
                 )
-                wire_s = 0.0  # receive wire time folded into publish latency
+                wire_s = self.mailbox.download_time_s(msg, self.bw)
                 peer.recv_time_s += wire_s
-        return grads_peers
+                recv_wire_s += wire_s
+        return grads_peers, recv_wire_s
 
     def _update(self, peer: PeerState, grads_peers: Dict[int, Any], lr: float):
         with peer.metrics.stage("model_update"):
@@ -300,28 +331,65 @@ class LocalP2PCluster:
         assert self.mailbox.barrier_complete(epoch)  # SynchronisationBarrier
         self.mailbox.barrier_reset(epoch)
         for peer in self.peers:
-            gp = self._consume_all(peer, grads[peer.rank], at_time=None)
+            gp, _ = self._consume_all(peer, grads[peer.rank], at_time=None)
             self._update(peer, gp, self.detector.lr)
         loss = float(np.mean([s[0] for s in stats]))
         acc = float(np.mean([s[1] for s in stats]))
         return {"loss": loss, "acc": acc}
 
     def run_epoch_async(self, epoch: int) -> Dict[str, float]:
-        """Discrete-event async epoch: no barrier, stale gradients allowed."""
-        events = [(p.clock, p.rank) for p in self.peers]
-        heapq.heapify(events)
+        """Async epoch on the event engine: no barrier, stale gradients allowed.
+
+        Events fire in ``(virtual time, rank)`` order — identical to the
+        legacy heapq loop when churn is off. With ``churn_prob > 0`` a peer
+        may drop mid-step (SPIRT-style): the partial work is lost, the peer
+        rejoins ``churn_downtime_s`` later and redoes the step, while other
+        peers keep consuming its last published (stale) gradient.
+        """
+        engine = EventEngine(rng=self._rng)
+        engine.now = min((p.clock for p in self.peers), default=0.0)
         stats = []
-        while events:
-            _, rank = heapq.heappop(events)
-            peer = self.peers[rank]
-            with peer.metrics.stage("compute_gradients"):
-                g, loss, acc, wall = self._compute_peer_gradient(peer, epoch)
-            sim_wall = wall * peer.speed
-            peer.clock += sim_wall
-            self._publish(peer, g, epoch, at_time=peer.clock)
-            gp = self._consume_all(peer, g, at_time=peer.clock)
-            self._update(peer, gp, self.detector.lr)
-            stats.append((loss, acc))
+        order = self.last_event_order = []
+
+        def schedule_peer(peer: PeerState):
+            cache: Dict[str, Any] = {}
+
+            def compute_fire():
+                order.append(peer.rank)
+                with peer.metrics.stage("compute_gradients"):
+                    g, loss, acc, wall = self._compute_peer_gradient(peer, epoch)
+                cache.update(g=g, loss=loss, acc=acc, wall=wall, attempts=0)
+                attempt_fire()
+
+            def attempt_fire():
+                sim_wall = cache["wall"] * peer.speed
+                cache["attempts"] += 1
+                if (
+                    self.churn_prob > 0.0
+                    and cache["attempts"] <= 5  # then forcibly stay up
+                    and engine.rng.random() < self.churn_prob
+                ):
+                    # dropped mid-compute: partial work lost, rejoin later
+                    lost = sim_wall * engine.rng.random() + self.churn_downtime_s
+                    peer.clock += lost
+                    peer.drops += 1
+                    peer.downtime_s += lost
+                    engine.schedule_at(peer.clock, attempt_fire, priority=peer.rank)
+                    return
+                peer.clock += sim_wall
+                self._publish(peer, cache["g"], epoch, at_time=peer.clock)
+                gp, recv_wire_s = self._consume_all(
+                    peer, cache["g"], at_time=peer.clock
+                )
+                peer.clock += recv_wire_s
+                self._update(peer, gp, self.detector.lr)
+                stats.append((cache["loss"], cache["acc"]))
+
+            engine.schedule_at(peer.clock, compute_fire, priority=peer.rank)
+
+        for peer in self.peers:
+            schedule_peer(peer)
+        engine.run()
         loss = float(np.mean([s[0] for s in stats]))
         acc = float(np.mean([s[1] for s in stats]))
         return {"loss": loss, "acc": acc}

@@ -21,6 +21,7 @@ from repro import compat, models
 from repro.configs import get_config, reduced
 from repro.core.compression import QSGDConfig
 from repro.core.convergence import ConvergenceDetector
+from repro.core.events import RuntimeConfig, available_allocations
 from repro.core.exchange import available_exchanges
 from repro.core.p2p import Topology
 from repro.data import BatchKey, DataLoader, Partitioner, make_dataset
@@ -62,7 +63,39 @@ def main(argv=None):
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--restore", default=None)
     ap.add_argument("--log-every", type=int, default=10)
+    # serverless runtime model (ServerlessRuntime event engine)
+    ap.add_argument("--runtime-preset", default="ideal", choices=["ideal", "aws"],
+                    help="base fault/cold-start model for serverless accounting")
+    ap.add_argument("--failure-rate", type=float, default=None,
+                    help="override: P(invocation attempt fails)")
+    ap.add_argument("--cold-start-s", type=float, default=None,
+                    help="override: container init seconds on a cold start")
+    ap.add_argument("--concurrency", type=int, default=None,
+                    help="override: Lambda concurrency cap (0 = unbounded)")
+    ap.add_argument("--straggler-prob", type=float, default=None,
+                    help="override: P(invocation draws a tail latency)")
+    ap.add_argument("--allocation", default="static",
+                    choices=list(available_allocations()),
+                    help="per-epoch Lambda memory sizing policy")
+    ap.add_argument("--serverless-report", action="store_true",
+                    help="account measured step times under the runtime at exit")
     args = ap.parse_args(argv)
+
+    import dataclasses as _dc
+
+    runtime = (RuntimeConfig.aws_default() if args.runtime_preset == "aws"
+               else RuntimeConfig())
+    overrides = {}
+    if args.failure_rate is not None:
+        overrides["failure_rate"] = args.failure_rate
+    if args.cold_start_s is not None:
+        overrides["cold_start_s"] = args.cold_start_s
+    if args.concurrency is not None:
+        overrides["concurrency_limit"] = args.concurrency or None
+    if args.straggler_prob is not None:
+        overrides["straggler_prob"] = args.straggler_prob
+    if overrides:
+        runtime = _dc.replace(runtime, **overrides)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -82,7 +115,8 @@ def main(argv=None):
     )
     opt = adam() if args.optimizer == "adam" else sgd(momentum=0.9)
     sched = warmup_cosine(args.lr, args.steps // 10 + 1, args.steps)
-    trainer = P2PTrainer(cfg, opt, topo, mesh, sched)
+    trainer = P2PTrainer(cfg, opt, topo, mesh, sched,
+                         runtime=runtime, allocation=args.allocation)
     state = trainer.init_state(jax.random.PRNGKey(0))
     if args.restore:
         state = trainer.restore(args.restore, state)
@@ -99,6 +133,7 @@ def main(argv=None):
     detector = ConvergenceDetector(args.lr, mode="min", max_epochs=10**6)
 
     t0 = time.time()
+    step_times = []
     with compat.set_mesh(mesh):
         with axis_rules(rules):
             for i in range(args.steps):
@@ -106,7 +141,11 @@ def main(argv=None):
                     loader, BatchKey(0, i // loader.num_batches, i % loader.num_batches),
                     cfg.vocab_size,
                 )
+                ts = time.time()
                 state, metrics = trainer.step(state, batch)
+                if args.serverless_report:
+                    jax.block_until_ready(state.params)
+                    step_times.append(time.time() - ts)
                 if (i + 1) % args.log_every == 0 or i == 0:
                     loss = float(metrics["loss"])
                     print(
@@ -117,6 +156,16 @@ def main(argv=None):
                     if detector.step(loss):
                         print("converged (early stop)")
                         break
+    if args.serverless_report and step_times:
+        # skip step 0 (compilation); one "epoch" = the measured step batch
+        rep = trainer.account_serverless(step_times[1:] or step_times, epoch=0)
+        print(
+            f"serverless accounting [{args.runtime_preset}/{args.allocation}]: "
+            f"{rep.num_batches} invocations x {rep.lambda_memory_mb}MB, "
+            f"wall {rep.wall_time_s:.2f}s (measured {rep.measured_compute_s:.2f}s), "
+            f"cold_starts={rep.num_cold_starts} retries={rep.num_retries} "
+            f"queue_wait={rep.queue_wait_s:.2f}s cost=${rep.cost_usd:.6f}"
+        )
     if args.checkpoint:
         trainer.save(args.checkpoint, state)
         print(f"saved checkpoint to {args.checkpoint}")

@@ -62,7 +62,13 @@ class StageProbe:
 
 
 class StageMetrics:
-    """Aggregates per-stage records; `table()` emits Table-I-shaped rows."""
+    """Aggregates per-stage records; `table()` emits Table-I-shaped rows.
+
+    Besides the probe-measured Table-I stages, the serverless runtime
+    engine reports *simulated* stages (cold_start / queue_wait / retry):
+    per-invocation time that exists only in simulated wall-clock, recorded
+    via :meth:`add_simulated` with zero CPU/memory attribution.
+    """
 
     STAGES = (
         "compute_gradients",
@@ -70,6 +76,11 @@ class StageMetrics:
         "receive_gradients",
         "model_update",
         "convergence_detection",
+    )
+    SIM_STAGES = (
+        "cold_start",
+        "queue_wait",
+        "retry",
     )
 
     def __init__(self):
@@ -80,6 +91,10 @@ class StageMetrics:
 
     def add(self, stage: str, rec: StageRecord) -> None:
         self.records[stage].append(rec)
+
+    def add_simulated(self, stage: str, seconds: float) -> None:
+        """Record engine-simulated time (no CPU/memory — it never ran here)."""
+        self.records[stage].append(StageRecord(float(seconds), 0.0, 0.0, 0.0))
 
     def mean(self, stage: str) -> StageRecord:
         rs = self.records.get(stage, [])
@@ -95,7 +110,7 @@ class StageMetrics:
 
     def table(self) -> Dict[str, Dict[str, float]]:
         out = {}
-        for s in self.STAGES:
+        for s in self.STAGES + self.SIM_STAGES:
             m = self.mean(s)
             out[s] = {
                 "cpu_percent": round(m.cpu_percent, 2),

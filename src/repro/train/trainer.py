@@ -16,12 +16,13 @@ implementations through the registry.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Sequence, Union
 
 import jax
 
 from repro.configs.base import ModelConfig
 from repro.core.cost import CommCost
+from repro.core.events import AllocationPolicy, RuntimeConfig
 from repro.core.exchange import ExchangeProtocol
 from repro.core.p2p import (
     TrainState,
@@ -30,6 +31,7 @@ from repro.core.p2p import (
     build_p2p_train_step,
     exchange_context,
 )
+from repro.core.serverless import ExecutionReport, ServerlessExecutor
 from repro.optim import Optimizer
 from repro.train import checkpoint as ckpt
 from repro.train.steps import init_train_state, lm_loss
@@ -50,12 +52,17 @@ class P2PTrainer:
         moe_dispatch: str = "dense",
         use_ssd_kernel: bool = False,
         jit: bool = True,
+        runtime: Optional[RuntimeConfig] = None,  # serverless fault/cold-start model
+        allocation: Union[str, AllocationPolicy] = "static",  # per-epoch memory sizing
     ):
         self.cfg = cfg
         self.optimizer = optimizer
         self.topo = topo
         self.mesh = mesh
         self.schedule = schedule
+        self.runtime_config = runtime or RuntimeConfig()
+        self.allocation = allocation
+        self._serverless: Optional[ServerlessExecutor] = None
         self.protocol: ExchangeProtocol = topo.protocol()
         self.ctx = exchange_context(topo, mesh)
         if loss_fn is None:
@@ -104,6 +111,54 @@ class P2PTrainer:
             wire_bytes_per_step=self.wire_bytes_per_step(params_like),
             bandwidth_bps=bandwidth_bps,
             usd_per_gb_egress=usd_per_gb,
+        )
+
+    @property
+    def serverless(self) -> ServerlessExecutor:
+        """The trainer's serverless accountant, built from ``runtime`` /
+        ``allocation``. Warm pools and allocation history persist across
+        :meth:`account_serverless` calls, like a long-lived deployment."""
+        if self._serverless is None:
+            self._serverless = ServerlessExecutor(
+                backend="serverless",
+                runtime=self.runtime_config,
+                allocation=self.allocation,
+            )
+        return self._serverless
+
+    def account_serverless(
+        self,
+        per_batch_s: Sequence[float],
+        *,
+        batch_bytes: int = 0,
+        epoch: Optional[int] = None,
+        peer: Any = 0,
+    ) -> ExecutionReport:
+        """Price measured per-batch times under the serverless runtime.
+
+        On the TPU path the Lambda fan-out is the mesh axis, so the math
+        already ran; this method answers "what would these batch times have
+        taken/cost on Lambda" under the configured fault/cold-start model
+        and allocation policy. Model bytes come from the config's abstract
+        parameter shapes (fp32), no allocation happens.
+        """
+        if not hasattr(self, "_model_bytes"):
+            shapes = jax.eval_shape(
+                lambda: init_train_state(
+                    jax.random.PRNGKey(0), self.cfg, self.optimizer
+                )
+            ).params
+            import numpy as np
+
+            self._model_bytes = sum(
+                int(np.prod(x.shape)) * 4 for x in jax.tree.leaves(shapes)
+            )
+        return self.serverless.simulate(
+            per_batch_s,
+            model_bytes=self._model_bytes,
+            batch_bytes=batch_bytes,
+            epoch=epoch,
+            peer=peer,
         )
 
     # -- checkpointing -------------------------------------------------------

@@ -1,0 +1,268 @@
+"""ServerlessRuntime event engine: analytic equivalence, cold/warm pools,
+concurrency queueing, retries, stragglers, and the AllocationPolicy
+registry."""
+import numpy as np
+import pytest
+
+from repro.core.cost import ServerlessCost
+from repro.core.events import (
+    AllocationPolicy,
+    EventEngine,
+    FanoutTimeout,
+    RuntimeConfig,
+    ServerlessRuntime,
+    available_allocations,
+    get_allocation,
+    register_allocation,
+)
+from repro.core.serverless import ServerlessExecutor
+
+
+# ---------------------------------------------------------------------------
+# EventEngine
+# ---------------------------------------------------------------------------
+
+def test_engine_orders_by_time_priority_seq():
+    eng = EventEngine()
+    fired = []
+    eng.schedule_at(2.0, lambda: fired.append("t2"))
+    eng.schedule_at(1.0, lambda: fired.append("b"), priority=1)
+    eng.schedule_at(1.0, lambda: fired.append("a"), priority=0)
+    eng.schedule_at(1.0, lambda: fired.append("a2"), priority=0)  # seq tiebreak
+    eng.run()
+    assert fired == ["a", "a2", "b", "t2"]
+    assert eng.now == 2.0 and eng.processed == 4
+
+
+def test_engine_callbacks_schedule_more_events():
+    eng = EventEngine()
+    fired = []
+    def first():
+        fired.append(eng.now)
+        eng.schedule_in(0.5, lambda: fired.append(eng.now))
+    eng.schedule_at(1.0, first)
+    eng.run()
+    assert fired == [1.0, 1.5]
+
+
+def test_engine_reset_requires_empty_heap():
+    eng = EventEngine()
+    eng.schedule_at(1.0, lambda: None)
+    with pytest.raises(RuntimeError):
+        eng.reset(0.0)
+    eng.run()
+    eng.reset(5.0)
+    assert eng.now == 5.0
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: ideal runtime == legacy analytic accounting (<= 1e-6 s)
+# ---------------------------------------------------------------------------
+
+def test_ideal_runtime_reproduces_analytic_walltime():
+    """Zero faults + zero cold start + static allocation must reproduce
+    wall = orchestration + max(batch/speedup + invoke_overhead) exactly."""
+    ex = ServerlessExecutor()  # default = ideal runtime, static allocation
+    per_batch = [0.31, 1.27, 0.064, 0.88, 0.5]
+    model_bytes, batch_bytes = int(4e9), int(1e6)
+    rep = ex.simulate(per_batch, model_bytes=model_bytes, batch_bytes=batch_bytes)
+
+    plan = ex.planner.plan(
+        model_bytes=model_bytes, batch_bytes=batch_bytes,
+        num_batches=len(per_batch), instance_vcpus=ex.instance_vcpus,
+    )
+    speed = plan.lambda_spec.speedup_vs_instance
+    legacy_wall = ex.orchestration_overhead_s + max(
+        t / speed + ex.invoke_overhead_s for t in per_batch
+    )
+    assert rep.lambda_memory_mb == plan.lambda_spec.memory_mb
+    assert abs(rep.wall_time_s - legacy_wall) <= 1e-6
+    # and the legacy cost formula (1), modulo the now-default request fee
+    legacy_cost = ServerlessCost(
+        compute_time_s=legacy_wall, num_batches=len(per_batch),
+        lambda_memory_mb=plan.lambda_spec.memory_mb, instance=ex.instance,
+        include_request_fee=False,
+    ).cost_per_peer
+    assert rep.cost_usd - rep.request_fee_usd == pytest.approx(legacy_cost, abs=1e-12)
+    assert rep.num_cold_starts == len(per_batch)  # first-ever containers...
+    assert rep.cold_start_s == 0.0  # ...at zero penalty
+    assert rep.num_retries == 0 and rep.queue_wait_s == 0.0
+
+
+def test_ideal_runtime_is_deterministic_and_epoch_auto_increments():
+    a = ServerlessExecutor()
+    b = ServerlessExecutor()
+    for ex in (a, b):
+        ex.simulate([0.2, 0.4], model_bytes=int(1e8), batch_bytes=int(1e5))
+        ex.simulate([0.2, 0.4], model_bytes=int(1e8), batch_bytes=int(1e5))
+    assert [r.makespan_s for r in a.history[0]] == [r.makespan_s for r in b.history[0]]
+    assert [len(a.history[0]), a.history[0][0].memory_mb] == [2, b.history[0][0].memory_mb]
+
+
+# ---------------------------------------------------------------------------
+# Cold/warm container pool
+# ---------------------------------------------------------------------------
+
+def test_warm_pool_reuse_across_epochs():
+    ex = ServerlessExecutor(runtime=RuntimeConfig(cold_start_s=2.0))
+    kw = dict(model_bytes=int(1e8), batch_bytes=int(1e5))
+    r0 = ex.simulate([0.1] * 4, **kw)
+    r1 = ex.simulate([0.1] * 4, **kw)
+    assert r0.num_cold_starts == 4 and r0.cold_start_s == pytest.approx(8.0)
+    assert r1.num_cold_starts == 0 and r1.cold_start_s == 0.0
+    assert r0.wall_time_s == pytest.approx(r1.wall_time_s + 2.0)
+    # cold-start GB-seconds are billed
+    assert r0.cost_usd > r1.cost_usd
+
+
+def test_memory_tier_change_strands_warm_pool():
+    rt = ServerlessRuntime(RuntimeConfig(cold_start_s=1.0))
+    r0 = rt.fanout([0.1] * 3, memory_mb=832)
+    r1 = rt.fanout([0.1] * 3, memory_mb=832)
+    r2 = rt.fanout([0.1] * 3, memory_mb=896)  # re-sized -> cold again
+    assert r0.num_cold_starts == 3 and r1.num_cold_starts == 0
+    assert r2.num_cold_starts == 3
+
+
+def test_warm_pool_expires_after_keepalive():
+    rt = ServerlessRuntime(RuntimeConfig(cold_start_s=1.0, container_keepalive_s=5.0))
+    rt.fanout([0.1], memory_mb=832)
+    rt.clock += 100.0  # idle deployment, TTL long gone
+    r = rt.fanout([0.1], memory_mb=832)
+    assert r.num_cold_starts == 1
+
+
+# ---------------------------------------------------------------------------
+# Concurrency caps
+# ---------------------------------------------------------------------------
+
+def test_concurrency_cap_serializes_and_records_queue_wait():
+    rt = ServerlessRuntime(RuntimeConfig(concurrency_limit=1))
+    r = rt.fanout([1.0, 1.0, 1.0], memory_mb=832)
+    assert r.makespan_s == pytest.approx(3.0)
+    assert r.queue_wait_s_total == pytest.approx(0.0 + 1.0 + 2.0)
+
+    rt2 = ServerlessRuntime(RuntimeConfig(concurrency_limit=3))
+    r2 = rt2.fanout([1.0, 1.0, 1.0], memory_mb=832)
+    assert r2.makespan_s == pytest.approx(1.0)
+    assert r2.queue_wait_s_total == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Failures, retries, stragglers
+# ---------------------------------------------------------------------------
+
+def test_failures_retry_with_backoff_and_are_billed():
+    cfg = RuntimeConfig(failure_rate=0.5, retry_backoff_s=0.25, seed=3)
+    r = ServerlessRuntime(cfg).fanout([1.0] * 20, memory_mb=832)
+    assert r.num_retries > 0
+    # dead work + backoff stretch the makespan past the fault-free 1.0s
+    assert r.makespan_s > 1.0
+    assert r.retry_s_total > 0
+    assert r.billed_s_total > sum(i.exec_s for i in r.invocations)
+    # same seed -> identical trajectory
+    r2 = ServerlessRuntime(cfg).fanout([1.0] * 20, memory_mb=832)
+    assert [(i.attempts, i.end_s) for i in r.invocations] == [
+        (i.attempts, i.end_s) for i in r2.invocations
+    ]
+    # retries show up in dollars: re-executed GB-s + per-request fees
+    with_retries = ServerlessCost(
+        compute_time_s=2.0, num_batches=20, lambda_memory_mb=832,
+        num_retries=r.num_retries,
+        retry_billed_s=sum(i.failed_s for i in r.invocations),
+    )
+    without = ServerlessCost(compute_time_s=2.0, num_batches=20, lambda_memory_mb=832)
+    assert with_retries.cost_per_peer > without.cost_per_peer
+    assert with_retries.request_fee_usd > without.request_fee_usd
+
+
+def test_stragglers_are_seeded_and_stretch_the_tail():
+    cfg = RuntimeConfig(straggler_prob=1.0, straggler_slowdown=2.0, seed=11)
+    r = ServerlessRuntime(cfg).fanout([1.0] * 8, memory_mb=832)
+    assert all(i.straggler_factor > 1.0 for i in r.invocations)
+    assert r.makespan_s > 1.0
+    r2 = ServerlessRuntime(cfg).fanout([1.0] * 8, memory_mb=832)
+    assert [i.straggler_factor for i in r.invocations] == [
+        i.straggler_factor for i in r2.invocations
+    ]
+
+
+def test_hard_timeout_exhausts_retry_budget():
+    rt = ServerlessRuntime(RuntimeConfig(max_retries=2, retry_backoff_s=0.0))
+    with pytest.raises(FanoutTimeout):
+        rt.fanout([10.0], memory_mb=832, timeout_s=5.0)
+
+
+# ---------------------------------------------------------------------------
+# AllocationPolicy registry
+# ---------------------------------------------------------------------------
+
+def test_allocation_registry_enumerates_and_rejects_unknown():
+    names = available_allocations()
+    assert {"static", "latency", "aimd"} <= set(names)
+    with pytest.raises(ValueError, match="registered policies"):
+        get_allocation("definitely-not-registered")
+    for n in names:
+        assert get_allocation(n).name == n
+
+
+def test_register_allocation_decorator():
+    @register_allocation("test_fixed_tier")
+    class FixedTier(AllocationPolicy):
+        def memory_mb(self, *, epoch, planned_mb, history):
+            return 4096
+
+    assert "test_fixed_tier" in available_allocations()
+    ex = ServerlessExecutor(allocation="test_fixed_tier")
+    rep = ex.simulate([0.5], model_bytes=int(1e8), batch_bytes=int(1e5))
+    assert rep.lambda_memory_mb == 4096
+
+
+def test_latency_allocation_buys_walltime_with_memory():
+    """Dynamic allocation measurably changes accounted wall-time vs static."""
+    kw = dict(model_bytes=int(5e7), batch_bytes=int(4e6))
+    static = ServerlessExecutor(allocation="static")
+    dynamic = ServerlessExecutor(
+        allocation=get_allocation("latency", target_batch_s=0.5)
+    )
+    per_batch = [1.0] * 8
+    s_walls, d_walls, d_mem = [], [], []
+    for epoch in range(3):
+        s_walls.append(static.simulate(per_batch, epoch=epoch, **kw).wall_time_s)
+        rep = dynamic.simulate(per_batch, epoch=epoch, **kw)
+        d_walls.append(rep.wall_time_s)
+        d_mem.append(rep.lambda_memory_mb)
+    assert s_walls[0] == pytest.approx(s_walls[-1])  # static: no adaptation
+    assert d_mem[-1] > d_mem[0]  # policy grew the tier
+    assert d_walls[-1] < 0.7 * s_walls[-1]  # and bought wall-time for it
+
+
+def test_allocation_clamped_to_fit_floor_and_lambda_cap():
+    ex = ServerlessExecutor(
+        allocation=get_allocation("latency", target_batch_s=1e6)  # "shrink forever"
+    )
+    kw = dict(model_bytes=int(4e9), batch_bytes=int(1e6))
+    r0 = ex.simulate([0.5] * 2, epoch=0, **kw)
+    r1 = ex.simulate([0.5] * 2, epoch=1, **kw)
+    assert r1.lambda_memory_mb == r0.lambda_memory_mb  # can't go below fit floor
+
+    @register_allocation("test_huge_tier")
+    class Huge(AllocationPolicy):
+        def memory_mb(self, *, epoch, planned_mb, history):
+            return 10**9
+
+    r = ServerlessExecutor(allocation="test_huge_tier").simulate([0.5], **kw)
+    assert r.lambda_memory_mb == 10_240  # Lambda cap
+
+
+def test_aimd_allocation_converges_near_target():
+    ex = ServerlessExecutor(
+        allocation=get_allocation("aimd", target_batch_s=1.0, increase_mb=512)
+    )
+    kw = dict(model_bytes=int(5e7), batch_bytes=int(4e6))
+    mems = [
+        ex.simulate([1.0] * 4, epoch=e, **kw).lambda_memory_mb for e in range(6)
+    ]
+    assert mems[1] > mems[0]  # additive increase while over target
+    exec_last = ex.history[0][-1].max_exec_s
+    assert exec_last < 1.5  # settled around the target latency

@@ -76,9 +76,13 @@ def test_stage_metrics_table_shape():
     m = StageMetrics()
     with m.stage("compute_gradients"):
         sum(range(100000))
+    m.add_simulated("cold_start", 2.5)
     t = m.table()
-    assert set(t) == set(StageMetrics.STAGES)
+    # Table-I stages plus the runtime engine's simulated stages
+    assert set(t) == set(StageMetrics.STAGES) | set(StageMetrics.SIM_STAGES)
     assert t["compute_gradients"]["time_s"] > 0
+    assert t["cold_start"]["time_s"] == pytest.approx(2.5)
+    assert t["cold_start"]["cpu_percent"] == 0.0  # simulated, never ran here
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,113 @@
+"""HostMailbox coverage — latest-wins register semantics, time-based
+visibility, the synchronization barrier across interleaved epochs, and the
+>100 MB S3-indirection path (paper §III-B.3)."""
+import pytest
+
+from repro.core.mailbox import MESSAGE_CAP_BYTES, HostMailbox
+
+
+# ---------------------------------------------------------------------------
+# Latest-wins register semantics
+# ---------------------------------------------------------------------------
+
+def test_latest_wins_replacement_keeps_only_newest():
+    mb = HostMailbox(2)
+    for i in range(5):
+        mb.publish(0, f"g{i}", nbytes=10 + i, time=float(i), epoch=0)
+    msg = mb.consume(0)
+    assert msg.payload == "g4" and msg.nbytes == 14
+    assert mb.stats["publishes"] == 5
+    # register, not queue: repeated reads see the same message
+    assert mb.consume(0).payload == "g4"
+    assert mb.stats["consumes"] == 2
+
+
+def test_replacement_crosses_epochs():
+    mb = HostMailbox(2)
+    mb.publish(1, "old", nbytes=8, time=1.0, epoch=0)
+    mb.publish(1, "new", nbytes=8, time=9.0, epoch=3)
+    msg = mb.consume(1)
+    assert msg.payload == "new" and msg.epoch == 3
+
+
+def test_empty_queue_and_unpublished_peer():
+    mb = HostMailbox(3)
+    assert mb.consume(2) is None
+    assert mb.consume(2, at_time=100.0) is None
+
+
+# ---------------------------------------------------------------------------
+# consume(at_time=...) visibility ordering
+# ---------------------------------------------------------------------------
+
+def test_visibility_ordering_follows_publish_time():
+    mb = HostMailbox(2)
+    mb.publish(0, "early", nbytes=4, time=2.0, epoch=0)
+    assert mb.consume(0, at_time=1.0) is None  # not yet on the wire
+    assert mb.consume(0, at_time=2.0).payload == "early"  # boundary: visible
+    mb.publish(0, "late", nbytes=4, time=7.0, epoch=1)
+    # latest-wins replaced the register: a reader at t=3 sees NOTHING, not
+    # the old message — exactly the stale-read hazard of async consumption
+    assert mb.consume(0, at_time=3.0) is None
+    assert mb.consume(0, at_time=7.5).payload == "late"
+    assert mb.consume(0, at_time=None).payload == "late"  # sync read: no clock
+
+
+# ---------------------------------------------------------------------------
+# Barrier across interleaved epochs
+# ---------------------------------------------------------------------------
+
+def test_barrier_epochs_are_independent_and_interleave():
+    mb = HostMailbox(2)
+    mb.barrier_signal(0, epoch=0)
+    mb.barrier_signal(0, epoch=1)  # peer 0 raced ahead into epoch 1
+    assert not mb.barrier_complete(0)
+    assert not mb.barrier_complete(1)
+    mb.barrier_signal(1, epoch=0)
+    assert mb.barrier_complete(0)
+    assert not mb.barrier_complete(1)
+    mb.barrier_reset(0)  # resetting epoch 0 must not eat epoch-1 signals
+    assert not mb.barrier_complete(0)
+    mb.barrier_signal(1, epoch=1)
+    assert mb.barrier_complete(1)
+    mb.barrier_reset(1)
+    assert not mb.barrier_complete(1)
+
+
+def test_barrier_duplicate_signals_do_not_overcount():
+    mb = HostMailbox(3)
+    mb.barrier_signal(0, epoch=0)
+    mb.barrier_signal(0, epoch=0)
+    mb.barrier_signal(1, epoch=0)
+    assert not mb.barrier_complete(0)  # distinct peers, not raw signal count
+    mb.barrier_signal(2, epoch=0)
+    assert mb.barrier_complete(0)
+
+
+# ---------------------------------------------------------------------------
+# >100 MB S3-indirection path
+# ---------------------------------------------------------------------------
+
+def test_s3_indirection_threshold_and_stats():
+    mb = HostMailbox(1)
+    mb.publish(0, "fits", nbytes=MESSAGE_CAP_BYTES, time=0.0, epoch=0)
+    assert not mb.consume(0).via_s3
+    assert mb.stats["s3_indirections"] == 0
+    mb.publish(0, "big", nbytes=MESSAGE_CAP_BYTES + 1, time=1.0, epoch=0)
+    msg = mb.consume(0)
+    assert msg.via_s3 and msg.s3_uuid is not None
+    assert mb.stats["s3_indirections"] == 1
+    mb.publish(0, "bigger", nbytes=2 * MESSAGE_CAP_BYTES, time=2.0, epoch=1)
+    assert mb.stats["s3_indirections"] == 2
+
+
+def test_download_time_charges_payload_and_s3_round_trip():
+    mb = HostMailbox(1, s3_rtt_s=0.05)
+    bw = 1e9
+    mb.publish(0, "small", nbytes=10_000_000, time=0.0, epoch=0)
+    small = mb.consume(0)
+    assert mb.download_time_s(small, bw) == pytest.approx(10_000_000 * 8 / bw)
+    mb.publish(0, "big", nbytes=MESSAGE_CAP_BYTES + 1, time=1.0, epoch=0)
+    big = mb.consume(0)
+    expected = (MESSAGE_CAP_BYTES + 1) * 8 / bw + 0.05
+    assert mb.download_time_s(big, bw) == pytest.approx(expected)
