@@ -73,15 +73,20 @@ def run(quick: bool = True):
         "fig5/claim:compression_reduces_comm", 0.0,
         f"comm_speedup={comm_speedup:.2f}x;paper=Fig5_reduction;holds={comm_speedup > 2}",
     )
-    # Registry sweep: every registered protocol's publish-side wire bytes
-    # (the numbers core/cost.py's CommCost consumes), same model gradients.
+    # Registry sweep: every registered protocol's wire bytes — per-peer
+    # totals feed CommCost (degree-aware: full mesh, so degree = P-1); the
+    # compression ratio compares per-edge payloads so it stays a codec
+    # property, independent of the overlay.
     ctx = ExchangeContext(num_peers=PEERS, qsgd=qcfg, topk_frac=0.01)
     for name in available_exchanges():
-        wb = get_exchange(name).wire_bytes(grads, ctx)
+        proto = get_exchange(name)
+        wb = proto.wire_bytes(grads, ctx)
+        per_edge = proto.wire_bytes_per_edge(grads, ctx)
         cc = CommCost(wire_bytes_per_step=wb, bandwidth_bps=BANDWIDTH)
         record(
             f"fig5/wire/{name}", cc.seconds_per_step * 1e6,
-            f"bytes={wb};ratio_vs_raw={raw/max(wb,1):.2f}",
+            f"bytes={wb};bytes_per_edge={per_edge};"
+            f"ratio_vs_raw={raw/max(per_edge,1):.2f}",
         )
     return comm_raw, comm_qsgd
 

@@ -24,6 +24,7 @@ def main() -> None:
         fig5_compression,
         fig6_sync_async,
         fig7_faults_coldstart,
+        fig8_topology_scaling,
         roofline,
         table1_resource_stages,
         table2_3_cost,
@@ -38,6 +39,7 @@ def main() -> None:
         "fig5": fig5_compression,
         "fig6": fig6_sync_async,
         "fig7": fig7_faults_coldstart,
+        "fig8": fig8_topology_scaling,
         "roofline": roofline,
     }
     if args.only:

@@ -28,12 +28,14 @@ def main():
         lr=0.05,
         sync=True,  # RabbitMQ barrier semantics
         exchange="allgather_mean",  # any name in repro.core.available_exchanges()
+        graph="ring",  # peer overlay: full | ring | gossip:K | hierarchical
         executor=ServerlessExecutor(  # Lambda fan-out on the event engine
             backend="serverless",
             runtime=RuntimeConfig.aws_default(),  # cold starts, rare faults
             allocation="latency",  # dynamic per-epoch memory sizing
         ),
     )
+    print(f"overlay: {cluster.graph.describe()}")
     print(f"exchange={cluster.protocol.name}: {cluster.comm_cost().summary()}")
     history = cluster.run(epochs=3)
 

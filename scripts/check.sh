@@ -16,10 +16,20 @@ g = {'w': jnp.zeros((64, 64))}
 for n in available_exchanges():
     print(f'  {n}: {get_exchange(n).wire_bytes(g, ExchangeContext(num_peers=4))} B/peer/step')
 "
+  echo "== smoke: peer graph registry =="
+  python -c "
+from repro.core.graph import available_graphs, get_graph
+for n in available_graphs():
+    if n == 'static':
+        continue  # programmatic-only (needs an explicit adjacency)
+    print(f'  {get_graph(n, 8, seed=0).describe()}')
+"
   echo "== smoke: paper cost tables (Tables II/III) =="
   python -m benchmarks.run --only table2_3
   echo "== smoke: serverless runtime fault sweep (Fig. 7) =="
   python -m benchmarks.run --only fig7
+  echo "== smoke: overlay topology scaling (Fig. 8) =="
+  python -m benchmarks.run --only fig8
 }
 
 if [[ "${1:-}" == "--fast" ]]; then

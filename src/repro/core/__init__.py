@@ -6,6 +6,13 @@ from repro.core.exchange import (
     get_exchange,
     register_exchange,
 )
+from repro.core.graph import (
+    PeerGraph,
+    StaticGraph,
+    available_graphs,
+    get_graph,
+    register_graph,
+)
 from repro.core.p2p import (
     TrainState,
     Topology,
@@ -28,6 +35,7 @@ from repro.core.events import (
     EventEngine,
     FanoutResult,
     InvocationRecord,
+    LinkModel,
     RuntimeConfig,
     ServerlessRuntime,
     available_allocations,
@@ -49,6 +57,11 @@ __all__ = [
     "available_exchanges",
     "get_exchange",
     "register_exchange",
+    "PeerGraph",
+    "StaticGraph",
+    "available_graphs",
+    "get_graph",
+    "register_graph",
     "TrainState",
     "Topology",
     "as_train_state",
@@ -71,6 +84,7 @@ __all__ = [
     "EventEngine",
     "FanoutResult",
     "InvocationRecord",
+    "LinkModel",
     "RuntimeConfig",
     "ServerlessRuntime",
     "available_allocations",

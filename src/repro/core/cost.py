@@ -59,6 +59,10 @@ class ServerlessCost:
     num_retries: int = 0  # re-invocations after failures/timeouts
     retry_billed_s: float = 0.0  # Lambda seconds burned by failed attempts
     cold_start_billed_s: float = 0.0  # container init time billed as GB-s
+    # degree-aware exchange egress: bytes the peer moved on the overlay
+    # this epoch (per-edge payload x degree, from the exchange accounting)
+    egress_bytes: int = 0
+    usd_per_gb_egress: float = 0.0
 
     @property
     def lambda_cost_s(self) -> float:
@@ -71,14 +75,18 @@ class ServerlessCost:
         return LAMBDA_USD_PER_REQUEST * (self.num_batches + self.num_retries)
 
     @property
+    def egress_usd(self) -> float:
+        return self.egress_bytes / 1e9 * self.usd_per_gb_egress
+
+    @property
     def cost_per_peer(self) -> float:
-        """Formula (1) + retry re-execution + cold-start GB-s + request fees."""
+        """Formula (1) + retries + cold-start GB-s + request fees + egress."""
         c = (
             self.lambda_cost_s * self.num_batches
             + ec2_cost_per_second(self.instance)
         ) * self.compute_time_s
         c += self.lambda_cost_s * (self.retry_billed_s + self.cold_start_billed_s)
-        return c + self.request_fee_usd
+        return c + self.request_fee_usd + self.egress_usd
 
 
 @dataclass(frozen=True)
@@ -101,11 +109,21 @@ class CommCost:
     (``protocol.wire_bytes`` / ``P2PTrainer.comm_cost`` /
     ``LocalP2PCluster.comm_cost``), so compression and sparsification show
     up in wire seconds and egress dollars without re-deriving sizes.
+
+    Degree-aware since the PeerGraph redesign: ``bytes_per_edge`` is the
+    payload on one overlay edge and ``degree`` the peer's neighbor count,
+    so sparse topologies (ring: 2, gossip: k) read O(degree) per peer
+    while the full mesh reads O(P). ``bytes_per_edge=0`` marks a fused
+    collective (e.g. psum_mean) whose traffic doesn't decompose into
+    edges — ``wire_bytes_per_step`` is then the only authoritative figure.
     """
 
     wire_bytes_per_step: int
     bandwidth_bps: float = 1e9  # the paper's simulated inter-peer link
     usd_per_gb_egress: float = 0.0  # e.g. S3 / inter-AZ transfer pricing
+    bytes_per_edge: int = 0  # payload per overlay edge; 0 = fused/unknown
+    degree: float = 0.0  # mean neighbor count under the overlay graph
+    graph_name: str = "full"
 
     @property
     def seconds_per_step(self) -> float:
@@ -116,11 +134,17 @@ class CommCost:
         return self.wire_bytes_per_step / 1e9 * self.usd_per_gb_egress
 
     def summary(self) -> str:
-        return (
+        s = (
             f"{self.wire_bytes_per_step/1e6:.2f} MB/peer/step on the wire "
             f"({self.seconds_per_step*1e3:.1f} ms at "
             f"{self.bandwidth_bps/1e9:g} Gb/s)"
         )
+        if self.bytes_per_edge:
+            s += (
+                f" [{self.graph_name} graph: {self.bytes_per_edge/1e6:.2f} MB"
+                f"/edge x degree {self.degree:g}]"
+            )
+        return s
 
 
 @dataclass(frozen=True)

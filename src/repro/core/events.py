@@ -90,6 +90,30 @@ class EventEngine:
 
 
 # ---------------------------------------------------------------------------
+# Link model
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    """Wire time of one message on a simulated inter-peer link.
+
+    Upload/download charging for event-driven simulations goes through
+    ``transfer_s``: the P2P cluster charges one per publish and one per
+    edge-respecting consume (``HostMailbox.download_time_s(link=...)``
+    adds the S3 round trip on top for indirected payloads), so with a
+    sparse overlay graph a peer's per-step wire time is O(degree) rather
+    than O(P).
+    """
+
+    bandwidth_bps: float = 1e9
+    per_message_overhead_s: float = 0.0  # broker hop / TLS / framing
+
+    def transfer_s(self, nbytes: int) -> float:
+        return nbytes * 8.0 / self.bandwidth_bps + self.per_message_overhead_s
+
+
+# ---------------------------------------------------------------------------
 # Runtime configuration
 # ---------------------------------------------------------------------------
 

@@ -14,9 +14,16 @@ paths plus its wire-byte accounting:
   :meth:`~ExchangeProtocol.host_decode` serialize one peer's gradient for
   the :class:`~repro.core.mailbox.HostMailbox` used by the
   ``LocalP2PCluster`` discrete-event simulator.
-* **accounting** — :meth:`~ExchangeProtocol.wire_bytes` reports the bytes
-  one peer publishes per step; :class:`repro.core.cost.CommCost` turns
-  that into wire seconds / dollars.
+* **accounting** — :meth:`~ExchangeProtocol.wire_bytes_per_edge` reports
+  the payload crossing one overlay edge; :meth:`~ExchangeProtocol.wire_bytes`
+  scales it by the peer's graph degree (``P - 1`` on the full mesh);
+  :class:`repro.core.cost.CommCost` turns that into wire seconds / dollars.
+
+The peer overlay itself (full / ring / gossip-k / hierarchical) is the
+:class:`repro.core.graph.PeerGraph` carried in :class:`ExchangeContext`:
+sync protocols mix with the graph's Metropolis–Hastings weights instead
+of the global mean whenever ``ctx.mixing`` is set (it is ``None`` on the
+full graph, which keeps the legacy arithmetic bit-exact).
 
 Adding a protocol is one registered class::
 
@@ -52,6 +59,14 @@ class ExchangeContext:
     ``axis`` is the peer mesh axis (name or tuple of names) for device
     collectives; None on the host path, where peers are Python objects and
     the mailbox delivers payloads instead of ``all_gather``.
+
+    ``graph`` / ``mixing`` carry the peer overlay (see
+    ``repro.core.graph``): ``graph`` is the resolved :class:`PeerGraph`
+    and ``mixing`` its Metropolis–Hastings matrix ``W`` as an fp32
+    ``(P, P)`` array — or ``None`` for the full graph, where the weights
+    are uniformly ``1/P`` and protocols keep the legacy (bit-exact)
+    global-mean arithmetic. Sync protocols generalize the mean to
+    ``x_r <- sum_j W[r, j] x_j`` when ``mixing`` is set.
     """
 
     axis: Any = None
@@ -60,6 +75,20 @@ class ExchangeContext:
     qsgd: Optional[C.QSGDConfig] = None
     topk_frac: float = 0.01
     staleness: int = 1
+    graph: Any = None  # resolved repro.core.graph.PeerGraph, or None
+    mixing: Any = None  # (P, P) fp32 MH matrix; None => uniform 1/P (full)
+
+    @property
+    def degree(self) -> float:
+        """Mean neighbor count of one peer — (P-1) when no graph is set."""
+        if self.graph is not None:
+            return float(self.graph.mean_degree)
+        return float(max(self.num_peers - 1, 0))
+
+    def mix_row(self):
+        """This peer's mixing weights ``W[r]`` inside the manual region."""
+        r = lax.axis_index(self.axis)
+        return jnp.asarray(self.mixing, jnp.float32)[r], r
 
 
 class ExchangeProtocol(abc.ABC):
@@ -68,6 +97,7 @@ class ExchangeProtocol(abc.ABC):
     name: ClassVar[str] = "?"  # set by @register_exchange
     is_async: ClassVar[bool] = False  # consumes stale mailbox state
     requires_key: ClassVar[bool] = False  # needs an rng key (stochastic codec)
+    decomposes_per_edge: ClassVar[bool] = True  # False: fused collective
 
     # -- device path --------------------------------------------------------
     def init_state(self, grads_like, ctx: ExchangeContext):
@@ -93,18 +123,36 @@ class ExchangeProtocol(abc.ABC):
         return jax.tree.map(lambda g: g.astype(jnp.float32), payload)
 
     # -- accounting ----------------------------------------------------------
-    def wire_bytes(self, grads_like, ctx: ExchangeContext) -> int:
-        """Bytes one peer puts on the wire per step (publish side)."""
+    def wire_bytes_per_edge(self, grads_like, ctx: ExchangeContext) -> int:
+        """Payload bytes crossing ONE graph edge (one peer -> one neighbor).
+
+        This is the unit the overlay-aware accounting is built from:
+        compression/sparsification protocols override it, the degree
+        scaling lives in :meth:`wire_bytes`.
+        """
         itemsize = jnp.dtype(ctx.wire_dtype).itemsize
         return sum(int(np.prod(x.shape)) * itemsize for x in jax.tree.leaves(grads_like))
 
-    def host_wire_bytes(self, grads_like, ctx: ExchangeContext) -> int:
-        """Bytes one peer publishes on the HOST mailbox path.
+    def wire_bytes(self, grads_like, ctx: ExchangeContext) -> int:
+        """Total bytes one peer moves per step: per-edge payload x degree.
 
-        Defaults to :meth:`wire_bytes`; protocols whose device figure
-        assumes a fused collective the mailbox can't perform override this.
+        Degree comes from the overlay graph in ``ctx`` (``P - 1`` for the
+        full mesh), so sparse topologies (ring: 2, gossip: k) show their
+        O(degree) per-peer traffic while full-mesh grows O(P). Fused
+        collectives that don't decompose into edges override this whole
+        method (see ``psum_mean``).
         """
-        return self.wire_bytes(grads_like, ctx)
+        return int(round(self.wire_bytes_per_edge(grads_like, ctx) * ctx.degree))
+
+    def host_wire_bytes(self, grads_like, ctx: ExchangeContext) -> int:
+        """Bytes one peer PUBLISHES on the host mailbox path per step.
+
+        The mailbox is a latest-wins register: a peer publishes its
+        payload once and each neighbor pays the download separately
+        (charged per consume by ``HostMailbox.download_time_s``), so the
+        publish figure is one edge-payload regardless of degree.
+        """
+        return self.wire_bytes_per_edge(grads_like, ctx)
 
     def describe(self) -> str:
         return (self.__doc__ or "").strip().splitlines()[0] if self.__doc__ else ""
@@ -159,14 +207,24 @@ class AllGatherMean(ExchangeProtocol):
     """Paper-faithful Algorithm 1: publish to own queue, consume all, average.
 
     Device image: ``all_gather`` over the peer axis + local mean — the
-    gather IS the synchronization barrier (§III-B.6).
+    gather IS the synchronization barrier (§III-B.6). Under a sparse
+    overlay (``ctx.mixing`` set) the mean generalizes to the
+    Metropolis–Hastings neighbor mix ``W[r] @ bank``; on the full graph
+    ``W`` is uniform ``1/P`` and the legacy mean path is kept bit-exact.
     """
 
     def combine(self, grads, ctx, *, key=None, state=None):
         bank = jax.tree.map(
             lambda g: lax.all_gather(g.astype(ctx.wire_dtype), ctx.axis), grads
         )
-        avg = jax.tree.map(lambda b: b.astype(jnp.float32).mean(axis=0), bank)
+        if ctx.mixing is None:
+            avg = jax.tree.map(lambda b: b.astype(jnp.float32).mean(axis=0), bank)
+        else:
+            w, _ = ctx.mix_row()
+            avg = jax.tree.map(
+                lambda b: jnp.tensordot(w, b.astype(jnp.float32), axes=(0, 0)),
+                bank,
+            )
         return avg, state
 
 
@@ -176,10 +234,19 @@ class PsumMean(ExchangeProtocol):
 
     Mathematically identical to allgather_mean, strictly less traffic (no
     P-way buffer materialization); a ring all-reduce moves
-    ``2 (P-1)/P x raw`` bytes per peer.
+    ``2 (P-1)/P x raw`` bytes per peer. The fused reduction is inherently
+    global, so this protocol only supports the full overlay graph.
     """
 
+    decomposes_per_edge = False
+
     def combine(self, grads, ctx, *, key=None, state=None):
+        if ctx.mixing is not None:
+            raise ValueError(
+                "psum_mean is a fused global all-reduce and only supports "
+                "graph='full'; use allgather_mean (or qsgd/topk) for sparse "
+                "overlays"
+            )
         avg = jax.tree.map(
             lambda g: lax.pmean(g.astype(ctx.wire_dtype), ctx.axis).astype(jnp.float32),
             grads,
@@ -187,14 +254,10 @@ class PsumMean(ExchangeProtocol):
         return avg, state
 
     def wire_bytes(self, grads_like, ctx) -> int:
-        raw = super().wire_bytes(grads_like, ctx)
+        # Fused ring all-reduce: does not decompose into per-edge messages.
+        raw = self.wire_bytes_per_edge(grads_like, ctx)
         P_ = max(ctx.num_peers, 1)
         return int(raw * 2 * (P_ - 1) / P_)
-
-    def host_wire_bytes(self, grads_like, ctx) -> int:
-        # The host mailbox has no fused all-reduce: it ships the dense
-        # gradient, so the ring discount doesn't apply there.
-        return super().wire_bytes(grads_like, ctx)
 
 
 @register_exchange("qsgd")
@@ -216,6 +279,8 @@ class QSGDExchange(ExchangeProtocol):
             raise ValueError("qsgd exchange requires an rng key")
         key = jax.random.fold_in(key, lax.axis_index(ctx.axis))
 
+        w = None if ctx.mixing is None else ctx.mix_row()[0]
+
         def leaf(g, k):
             payload = C.quantize(g, k, qcfg)
             lev = lax.all_gather(payload["levels"], ctx.axis)  # (P, nb, B)
@@ -223,7 +288,10 @@ class QSGDExchange(ExchangeProtocol):
             deq = jax.vmap(lambda l, n: C.qsgd_dequantize_ref(l, n, qcfg.levels))(
                 lev, nrm
             )
-            flat = deq.mean(axis=0).reshape(-1)
+            if w is None:
+                flat = deq.mean(axis=0).reshape(-1)
+            else:
+                flat = jnp.tensordot(w, deq, axes=(0, 0)).reshape(-1)
             return flat[: g.size].reshape(g.shape)
 
         leaves, treedef = jax.tree_util.tree_flatten(grads)
@@ -243,7 +311,7 @@ class QSGDExchange(ExchangeProtocol):
         dense = C.dequantize_tree(payload, self._cfg(ctx))
         return jax.tree.map(lambda d, g: d.reshape(g.shape), dense, grads_like)
 
-    def wire_bytes(self, grads_like, ctx) -> int:
+    def wire_bytes_per_edge(self, grads_like, ctx) -> int:
         qcfg = self._cfg(ctx)
         total = 0
         for x in jax.tree.leaves(grads_like):
@@ -266,6 +334,7 @@ class TopKExchange(ExchangeProtocol):
 
     def combine(self, grads, ctx, *, key=None, state=None):
         frac = ctx.topk_frac
+        w = None if ctx.mixing is None else ctx.mix_row()[0]
 
         def leaf(g):
             flat = g.astype(jnp.float32).reshape(-1)
@@ -274,12 +343,14 @@ class TopKExchange(ExchangeProtocol):
             vals = jnp.take(flat, idx)
             vbank = lax.all_gather(vals.astype(ctx.wire_dtype), ctx.axis)  # (P, k)
             ibank = lax.all_gather(idx, ctx.axis)  # (P, k)
-            nP = vbank.shape[0]
+            vdense = vbank.astype(jnp.float32)
+            if w is None:
+                vdense = vdense / vbank.shape[0]
+            else:
+                vdense = vdense * w[:, None]  # neighbor-weighted scatter-add
             dense = jnp.zeros((flat.size,), jnp.float32)
-            dense = dense.at[ibank.reshape(-1)].add(
-                vbank.astype(jnp.float32).reshape(-1)
-            )
-            return (dense / nP).reshape(g.shape)
+            dense = dense.at[ibank.reshape(-1)].add(vdense.reshape(-1))
+            return dense.reshape(g.shape)
 
         return jax.tree.map(leaf, grads), state
 
@@ -310,7 +381,7 @@ class TopKExchange(ExchangeProtocol):
         is_payload = lambda x: isinstance(x, dict) and "values" in x
         return jax.tree.map(leaf, payload, grads_like, is_leaf=is_payload)
 
-    def wire_bytes(self, grads_like, ctx) -> int:
+    def wire_bytes_per_edge(self, grads_like, ctx) -> int:
         itemsize = jnp.dtype(ctx.wire_dtype).itemsize
         return sum(
             self._k(int(np.prod(x.shape)), ctx.topk_frac) * (itemsize + 4)
@@ -351,11 +422,17 @@ class StalenessMailbox(ExchangeProtocol):
             grads,
         )
 
+        w = None if ctx.mixing is None else jnp.asarray(ctx.mixing, jnp.float32)[r]
+
         def comb(ring, g):
             oldest = ring[0]  # bank published K steps ago
-            nP = oldest.shape[0]
-            others = oldest.sum(0) - oldest[r]
-            return (others + g.astype(jnp.float32)) / nP
+            if w is None:
+                nP = oldest.shape[0]
+                others = oldest.sum(0) - oldest[r]
+                return (others + g.astype(jnp.float32)) / nP
+            # neighbor-weighted stale mix; own contribution is always fresh
+            others = jnp.tensordot(w, oldest, axes=(0, 0)) - w[r] * oldest[r]
+            return others + w[r] * g.astype(jnp.float32)
 
         avg = jax.tree.map(comb, state, grads)
         new_state = jax.tree.map(

@@ -1,0 +1,338 @@
+"""Peer overlay graphs — the communication topology as a first-class API.
+
+Every layer of the seed repro hard-coded a fully-connected overlay: the
+exchange protocols averaged over *all* peers, :class:`HostMailbox`
+broadcast to all P queues, and the cost model charged ``(P-1) x payload``
+per step. The paper's central scalability concern is exactly that
+communication overhead as P grows; SPIRT (arXiv:2309.14148) and the
+fault-tolerance architecture study (arXiv:2302.13995) both motivate
+sparser, churn-tolerant peer graphs. This module makes the overlay a
+registry-backed abstraction, mirroring ``exchange.py``:
+
+* :class:`PeerGraph` — neighbor sets, a Metropolis–Hastings mixing matrix
+  ``W``, and diagnostics (degrees, spectral gap).
+* ``@register_graph`` / :func:`get_graph` — name-based resolution with
+  parameterized specs: ``"full"``, ``"ring"``, ``"gossip:k"`` (seeded
+  random ≥k-regular on a ring backbone), ``"hierarchical[:group]"``
+  (hub-and-spoke groups, hubs fully connected), ``"static"`` (explicit
+  adjacency, programmatic only).
+
+``Topology(graph="ring")`` resolves through this registry; sync exchange
+protocols generalize from the global mean to neighbor-weighted mixing
+``x_r <- sum_j W[r, j] x_j``.
+
+Why Metropolis–Hastings: with ``W_ij = 1 / (1 + max(d_i, d_j))`` on edges
+and ``W_ii = 1 - sum_j W_ij``, the matrix is symmetric and doubly
+stochastic for ANY undirected graph, so decentralized SGD preserves the
+gradient average in expectation and converges at a rate governed by the
+spectral gap ``1 - |lambda_2(W)|``. On the complete graph every degree is
+``P - 1``, so ``W_ij = 1/P`` everywhere — the neighbor-weighted mix
+*provably reduces* to today's ``allgather_mean`` arithmetic; the exchange
+layer exploits this by keeping the legacy (bit-exact) mean path whenever
+the resolved graph is ``full``.
+"""
+from __future__ import annotations
+
+import abc
+from typing import Dict, List, Optional, Sequence, Tuple, Type
+
+import numpy as np
+
+
+class PeerGraph(abc.ABC):
+    """An undirected overlay over ``num_peers`` ranks.
+
+    Rank ``r`` is the peer's mesh-axis index on the device path and the
+    ``PeerState.rank`` on the host path, so one graph object describes
+    both. Subclasses implement :meth:`build_adjacency`; everything else
+    (neighbors, mixing matrix, diagnostics) derives from it.
+    """
+
+    name: str = "?"  # set by @register_graph
+
+    def __init__(self, num_peers: int):
+        if num_peers < 1:
+            raise ValueError(f"num_peers must be >= 1, got {num_peers}")
+        self.num_peers = int(num_peers)
+        adj = np.asarray(self.build_adjacency(), dtype=bool)
+        if adj.shape != (num_peers, num_peers):
+            raise ValueError(
+                f"{type(self).__name__} built adjacency {adj.shape}, "
+                f"expected {(num_peers, num_peers)}"
+            )
+        if not np.array_equal(adj, adj.T):
+            raise ValueError(f"{type(self).__name__} adjacency must be symmetric")
+        np.fill_diagonal(adj, False)  # no self-loops; W_ii comes from MH
+        self._adj = adj
+        self._adj.setflags(write=False)
+
+    # -- construction --------------------------------------------------------
+    @abc.abstractmethod
+    def build_adjacency(self) -> np.ndarray:
+        """(P, P) symmetric bool adjacency; the diagonal is ignored."""
+
+    # -- neighbor sets -------------------------------------------------------
+    @property
+    def adjacency(self) -> np.ndarray:
+        return self._adj
+
+    def neighbors(self, rank: int) -> Tuple[int, ...]:
+        """Ranks adjacent to ``rank`` (self excluded), ascending."""
+        return tuple(int(j) for j in np.flatnonzero(self._adj[rank]))
+
+    @property
+    def is_full(self) -> bool:
+        """True iff every pair of distinct peers is connected."""
+        P = self.num_peers
+        return bool(self._adj.sum() == P * (P - 1))
+
+    def is_connected(self) -> bool:
+        P = self.num_peers
+        seen = {0}
+        frontier = [0]
+        while frontier:
+            r = frontier.pop()
+            for j in self.neighbors(r):
+                if j not in seen:
+                    seen.add(j)
+                    frontier.append(j)
+        return len(seen) == P
+
+    # -- mixing --------------------------------------------------------------
+    def mixing_matrix(self) -> np.ndarray:
+        """Metropolis–Hastings weights: symmetric, doubly stochastic fp64.
+
+        ``W_ij = 1 / (1 + max(d_i, d_j))`` on edges, ``W_ii`` absorbs the
+        remainder. Degrees exclude self, so an isolated peer gets
+        ``W_ii = 1`` (it keeps its own gradient).
+        """
+        P = self.num_peers
+        d = self.degrees
+        W = np.zeros((P, P), dtype=np.float64)
+        for i in range(P):
+            for j in self.neighbors(i):
+                W[i, j] = 1.0 / (1.0 + max(d[i], d[j]))
+            W[i, i] = 1.0 - W[i].sum()
+        return W
+
+    # -- diagnostics ---------------------------------------------------------
+    @property
+    def degrees(self) -> np.ndarray:
+        return self._adj.sum(axis=1).astype(np.int64)
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.degrees.max())
+
+    @property
+    def mean_degree(self) -> float:
+        return float(self.degrees.mean())
+
+    @property
+    def num_edges(self) -> int:
+        """Undirected edge count."""
+        return int(self._adj.sum()) // 2
+
+    def spectral_gap(self) -> float:
+        """``1 - |lambda_2|`` of the mixing matrix — the decentralized-SGD
+        consensus rate. 1.0 for the complete graph (one-shot consensus),
+        0.0 for a disconnected graph (no consensus across components)."""
+        if self.num_peers == 1:
+            return 1.0
+        lam = np.linalg.eigvalsh(self.mixing_matrix())
+        mags = np.sort(np.abs(lam))[::-1]
+        return float(1.0 - mags[1])
+
+    def describe(self) -> str:
+        return (
+            f"{self.name}(P={self.num_peers}, degree"
+            f"={self.mean_degree:g} mean/{self.max_degree} max, "
+            f"edges={self.num_edges}, spectral_gap={self.spectral_gap():.3f})"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[PeerGraph]] = {}
+
+
+def register_graph(name: str):
+    """Class decorator: make a graph reachable as ``Topology(graph=name)``."""
+
+    def deco(cls: Type[PeerGraph]) -> Type[PeerGraph]:
+        if not issubclass(cls, PeerGraph):
+            raise TypeError(f"{cls!r} must subclass PeerGraph")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def available_graphs() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_graph(spec, num_peers: int, *, seed: int = 0) -> PeerGraph:
+    """Resolve a graph spec for ``num_peers`` ranks.
+
+    ``spec`` is a :class:`PeerGraph` instance (validated for size and
+    passed through), or a registered name with an optional integer
+    parameter suffix: ``"full"``, ``"ring"``, ``"gossip:3"``,
+    ``"hierarchical:4"``. ``seed`` feeds stochastic constructions
+    (``gossip``) so the overlay is reproducible.
+    """
+    if isinstance(spec, PeerGraph):
+        if spec.num_peers != num_peers:
+            raise ValueError(
+                f"graph was built for {spec.num_peers} peers, "
+                f"topology has {num_peers}"
+            )
+        return spec
+    name, _, arg = str(spec).partition(":")
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown peer graph {spec!r}; registered graphs: "
+            f"{', '.join(available_graphs())}"
+        ) from None
+    kwargs = {}
+    if arg:
+        try:
+            kwargs["param"] = int(arg)
+        except ValueError:
+            raise ValueError(
+                f"graph spec {spec!r}: parameter after ':' must be an int"
+            ) from None
+    return cls(num_peers, seed=seed, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Registered graphs
+# ---------------------------------------------------------------------------
+
+
+@register_graph("full")
+class FullGraph(PeerGraph):
+    """Complete graph — the seed repo's implicit overlay. MH mixing is the
+    uniform ``1/P`` matrix, i.e. exactly the global mean."""
+
+    def __init__(self, num_peers: int, *, seed: int = 0):
+        super().__init__(num_peers)
+
+    def build_adjacency(self) -> np.ndarray:
+        return ~np.eye(self.num_peers, dtype=bool)
+
+
+@register_graph("ring")
+class RingGraph(PeerGraph):
+    """Bidirectional ring: ``r`` talks to ``(r ± 1) mod P``. Per-peer wire
+    bytes are O(1) in P — the canonical sparse decentralized-SGD overlay."""
+
+    def __init__(self, num_peers: int, *, seed: int = 0):
+        super().__init__(num_peers)
+
+    def build_adjacency(self) -> np.ndarray:
+        P = self.num_peers
+        adj = np.zeros((P, P), dtype=bool)
+        for r in range(P):
+            adj[r, (r + 1) % P] = adj[(r + 1) % P, r] = True
+        np.fill_diagonal(adj, False)  # P == 1, 2 degenerate cases
+        return adj
+
+
+@register_graph("gossip")
+class GossipGraph(PeerGraph):
+    """Seeded random ≥k-regular gossip overlay on a ring backbone.
+
+    A ring guarantees connectivity; extra edges are then sampled
+    uniformly (without replacement, seeded) until every peer has degree
+    at least ``k``. ``"gossip:3"`` selects k=3; per-peer wire bytes are
+    O(k), independent of P.
+    """
+
+    def __init__(self, num_peers: int, *, seed: int = 0, param: Optional[int] = None):
+        self.k = int(param) if param is not None else 3
+        if self.k < 1:
+            raise ValueError(f"gossip degree k must be >= 1, got {self.k}")
+        self.seed = seed
+        super().__init__(num_peers)
+
+    def build_adjacency(self) -> np.ndarray:
+        P = self.num_peers
+        adj = RingGraph(P).adjacency.copy()
+        if self.k <= 2 or P <= 3:
+            return adj
+        rng = np.random.default_rng(self.seed)
+        # candidate non-ring edges, shuffled once for determinism
+        cand = [(i, j) for i in range(P) for j in range(i + 1, P) if not adj[i, j]]
+        rng.shuffle(cand)
+        deg = adj.sum(axis=1)
+        for i, j in cand:
+            if deg.min() >= self.k:
+                break
+            if deg[i] < self.k or deg[j] < self.k:
+                adj[i, j] = adj[j, i] = True
+                deg[i] += 1
+                deg[j] += 1
+        return adj
+
+
+@register_graph("hierarchical")
+class HierarchicalGraph(PeerGraph):
+    """Hub-and-spoke groups: peers split into consecutive groups of
+    ``group`` ranks, each group's first rank is its hub; spokes connect
+    only to their hub, hubs form a complete graph among themselves.
+    ``"hierarchical:4"`` selects group size 4 (default: ~sqrt(P)) — the
+    SPIRT-style two-level aggregation overlay."""
+
+    def __init__(self, num_peers: int, *, seed: int = 0, param: Optional[int] = None):
+        if param is not None and param < 1:
+            raise ValueError(f"hierarchical group size must be >= 1, got {param}")
+        self.group = int(param) if param is not None else max(
+            1, int(round(np.sqrt(num_peers)))
+        )
+        super().__init__(num_peers)
+
+    def build_adjacency(self) -> np.ndarray:
+        P = self.num_peers
+        adj = np.zeros((P, P), dtype=bool)
+        hubs = list(range(0, P, self.group))
+        for h in hubs:
+            for r in range(h + 1, min(h + self.group, P)):
+                adj[h, r] = adj[r, h] = True  # spoke <-> its hub
+        for a in hubs:
+            for b in hubs:
+                if a != b:
+                    adj[a, b] = adj[b, a] = True  # hub mesh
+        return adj
+
+
+@register_graph("static")
+class StaticGraph(PeerGraph):
+    """Explicit adjacency — programmatic only (``Topology(graph=StaticGraph
+    .from_edges(P, [...]))``); resolving the bare name raises because there
+    is no adjacency to build from."""
+
+    def __init__(self, num_peers: int, adjacency=None, *, seed: int = 0):
+        if adjacency is None:
+            raise ValueError(
+                "static graph needs an explicit adjacency: construct "
+                "StaticGraph(P, adjacency) or StaticGraph.from_edges(P, edges) "
+                "and pass the instance, not the name"
+            )
+        self._static_adj = np.asarray(adjacency, dtype=bool)
+        super().__init__(num_peers)
+
+    @classmethod
+    def from_edges(cls, num_peers: int, edges: Sequence[Tuple[int, int]]):
+        adj = np.zeros((num_peers, num_peers), dtype=bool)
+        for i, j in edges:
+            adj[i, j] = adj[j, i] = True
+        return cls(num_peers, adj)
+
+    def build_adjacency(self) -> np.ndarray:
+        return self._static_adj

@@ -33,14 +33,30 @@ class Message:
 
 
 class HostMailbox:
-    """One latest-wins queue per peer + a synchronization barrier queue."""
+    """One latest-wins queue per peer + a synchronization barrier queue.
 
-    def __init__(self, num_peers: int, *, s3_rtt_s: float = S3_ROUND_TRIP_S):
+    ``graph`` (a :class:`repro.core.graph.PeerGraph`) restricts deliveries
+    to overlay edges: a consumer identifying itself via ``consume(...,
+    consumer=r)`` can only read queues of its graph neighbors — reads from
+    non-neighbors return ``None`` and count in ``stats["blocked"]``. With
+    no graph (or an anonymous consumer) the mailbox behaves like the
+    paper's fully-connected broker.
+    """
+
+    def __init__(
+        self, num_peers: int, *, s3_rtt_s: float = S3_ROUND_TRIP_S, graph=None
+    ):
         self.num_peers = num_peers
         self.s3_rtt_s = s3_rtt_s
+        self.graph = graph
         self._queues: List[Optional[Message]] = [None] * num_peers
         self._barrier: List[Tuple[int, int]] = []  # (peer, epoch) completions
-        self.stats = {"publishes": 0, "consumes": 0, "s3_indirections": 0}
+        self.stats = {
+            "publishes": 0, "consumes": 0, "s3_indirections": 0, "blocked": 0,
+        }
+        # (consumer, producer) pairs actually delivered — lets tests assert
+        # every delivery rode a graph edge, churn or not
+        self.delivered_edges: set = set()
 
     # -- gradient queues ---------------------------------------------------
     def publish(self, peer: int, payload: Any, *, nbytes: int, time: float, epoch: int):
@@ -54,23 +70,50 @@ class HostMailbox:
         if via_s3:
             self.stats["s3_indirections"] += 1
 
-    def download_time_s(self, msg: Message, bandwidth_bps: float) -> float:
+    def download_time_s(
+        self, msg: Message, bandwidth_bps: Optional[float] = None, *, link=None
+    ) -> float:
         """Receive-side wire time: payload transfer + the S3 fetch round trip
         for indirected (>100 MB) messages. Charged against the consumer's
-        simulated link by the cluster / event engine."""
-        t = msg.nbytes * 8.0 / bandwidth_bps
+        simulated link by the cluster / event engine. Pass either a raw
+        ``bandwidth_bps`` or a :class:`repro.core.events.LinkModel` (which
+        adds its per-message overhead)."""
+        if link is not None:
+            t = link.transfer_s(msg.nbytes)
+        else:
+            t = msg.nbytes * 8.0 / bandwidth_bps
         if msg.via_s3:
             t += self.s3_rtt_s
         return t
 
-    def consume(self, peer: int, *, at_time: Optional[float] = None) -> Optional[Message]:
-        """Read (without deleting) peer's latest message visible at `at_time`."""
+    def consume(
+        self,
+        peer: int,
+        *,
+        at_time: Optional[float] = None,
+        consumer: Optional[int] = None,
+    ) -> Optional[Message]:
+        """Read (without deleting) peer's latest message visible at `at_time`.
+
+        ``consumer`` identifies the reading peer; when the mailbox carries
+        an overlay graph, reads across non-edges are refused.
+        """
+        if (
+            self.graph is not None
+            and consumer is not None
+            and consumer != peer
+            and not self.graph.adjacency[consumer, peer]
+        ):
+            self.stats["blocked"] += 1
+            return None
         msg = self._queues[peer]
         self.stats["consumes"] += 1
         if msg is None:
             return None
         if at_time is not None and msg.publish_time > at_time:
             return None  # not yet published at this simulated time
+        if consumer is not None:
+            self.delivered_edges.add((consumer, peer))
         return msg
 
     # -- synchronization barrier (paper §III-B.6) ---------------------------

@@ -16,18 +16,24 @@ by name:
   ``async``           (paper §III-B.5)   staleness-K mailbox register bank
 
 ``Topology(exchange="<name>")`` accepts any registered name, so adding a
-protocol never touches this module. The train state is the
-:class:`TrainState` dataclass pytree (dict-style access kept for
-backward compatibility).
+protocol never touches this module. The overlay topology is equally
+pluggable: ``Topology(graph="ring" | "gossip:3" | "hierarchical" | ...)``
+resolves a :class:`~repro.core.graph.PeerGraph` whose Metropolis–Hastings
+mixing matrix generalizes the sync protocols' global mean to
+neighbor-weighted mixing (the full graph keeps the legacy bit-exact mean).
+The train state is the :class:`TrainState` dataclass pytree (dict-style
+access kept for backward compatibility).
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
@@ -38,6 +44,7 @@ from repro.core.exchange import (
     ExchangeProtocol,
     get_exchange,
 )
+from repro.core.graph import PeerGraph, get_graph
 from repro.optim import Optimizer, apply_updates, clip_by_global_norm
 
 
@@ -48,8 +55,11 @@ class Topology:
     peer_axes: Tuple[str, ...] = ("data",)  # manual axes: one peer per slice
     lambda_axis: Optional[str] = "model"  # auto axis: serverless pool / TP
     exchange: str = "allgather_mean"  # any name in exchange.available_exchanges()
+    graph: Any = "full"  # peer overlay: name in graph.available_graphs()
+    #   ("ring", "gossip:3", ...) or a PeerGraph instance
+    graph_seed: int = 0  # seeds stochastic overlays (gossip)
     qsgd: Optional[C.QSGDConfig] = None
-    async_mode: bool = False  # shorthand for exchange="async"
+    async_mode: bool = False  # DEPRECATED: use exchange="async"
     staleness: int = 1  # async: consume banks published K steps ago
     topk_frac: float = 0.01  # topk: fraction of entries shipped
     serverless: bool = True  # fan micro-batches out over lambda_axis
@@ -63,6 +73,15 @@ class Topology:
     # AverageBatchesGradients with bounded activation memory.
     accum_steps: int = 1
 
+    def __post_init__(self):
+        if self.async_mode:
+            warnings.warn(
+                'Topology(async_mode=True) is deprecated; use '
+                'Topology(exchange="async") — one name per protocol',
+                DeprecationWarning,
+                stacklevel=3,
+            )
+
     @property
     def axis(self):
         return self.peer_axes if len(self.peer_axes) > 1 else self.peer_axes[0]
@@ -73,6 +92,10 @@ class Topology:
 
     def protocol(self) -> ExchangeProtocol:
         return get_exchange(self.exchange_name)
+
+    def peer_graph(self, num_peers: int) -> PeerGraph:
+        """Resolve the overlay for ``num_peers`` ranks via the registry."""
+        return get_graph(self.graph, num_peers, seed=self.graph_seed)
 
 
 def peer_rank(topo: Topology) -> jnp.ndarray:
@@ -89,9 +112,28 @@ def peer_count_static(topo: Topology, mesh) -> int:
 def exchange_context(
     topo: Topology, mesh=None, *, num_peers: Optional[int] = None
 ) -> ExchangeContext:
-    """Build the :class:`ExchangeContext` a protocol sees for ``topo``."""
+    """Build the :class:`ExchangeContext` a protocol sees for ``topo``.
+
+    Resolves the overlay graph for the peer count and attaches its
+    Metropolis–Hastings mixing matrix; on the full graph (where MH is
+    exactly uniform ``1/P``) ``mixing`` stays ``None`` so protocols keep
+    the legacy bit-exact global-mean arithmetic.
+    """
     if num_peers is None:
         num_peers = peer_count_static(topo, mesh) if (mesh is not None and topo.peer_axes) else 1
+    graph = topo.peer_graph(num_peers)
+    mixing = (
+        None
+        if (graph.is_full or num_peers <= 1)
+        else graph.mixing_matrix().astype(np.float32)
+    )
+    if mixing is not None and not topo.protocol().decomposes_per_edge:
+        # fail at construction, not inside the first jitted step trace
+        raise ValueError(
+            f"exchange protocol {topo.exchange_name!r} is a fused global "
+            f"collective and only supports graph='full'; got "
+            f"{graph.describe()}"
+        )
     return ExchangeContext(
         axis=topo.axis if topo.peer_axes else None,
         num_peers=num_peers,
@@ -99,6 +141,8 @@ def exchange_context(
         qsgd=topo.qsgd,
         topk_frac=topo.topk_frac,
         staleness=topo.staleness,
+        graph=graph,
+        mixing=mixing,
     )
 
 
@@ -208,24 +252,41 @@ def as_train_state(state) -> TrainState:
 
 
 def exchange_gradients(
-    grads, topo: Topology, key: Optional[jax.Array] = None, mailbox=None
+    grads,
+    topo: Topology,
+    key: Optional[jax.Array] = None,
+    mailbox=None,
+    *,
+    num_peers: Optional[int] = None,
 ):
     """Returns (averaged_grads, new_mailbox) via the registered protocol.
 
     Thin compatibility wrapper over ``topo.protocol().combine``; the train
-    step builder calls the protocol directly.
+    step builder calls the protocol directly. ``num_peers`` must be passed
+    explicitly for sync protocols (there is no mailbox state to infer it
+    from); for async state the ring's axis-1 extent is accepted as a
+    fallback but an explicit count always wins.
     """
     if not topo.peer_axes:
         return grads, mailbox
-    ctx = exchange_context(topo, num_peers=_mailbox_peers(mailbox))
+    if num_peers is None:
+        num_peers = _mailbox_peers(mailbox)
+        if num_peers is None:
+            raise ValueError(
+                "exchange_gradients needs num_peers=...: it cannot be "
+                "inferred without an async mailbox state (and graph-local "
+                "state need not span all peers)"
+            )
+    ctx = exchange_context(topo, num_peers=num_peers)
     return topo.protocol().combine(grads, ctx, key=key, state=mailbox)
 
 
-def _mailbox_peers(mailbox) -> int:
+def _mailbox_peers(mailbox) -> Optional[int]:
+    """Peer count from an async mailbox ring (leaves (K, P, *grad)), else None."""
     if mailbox is None:
-        return 1
+        return None
     leaves = jax.tree.leaves(mailbox)
-    return int(leaves[0].shape[1]) if leaves else 1
+    return int(leaves[0].shape[1]) if leaves else None
 
 
 def init_mailbox(grads_like, num_peers: int, *, staleness: int = 1):

@@ -160,6 +160,8 @@ class ExecutionReport:
     retry_s: float = 0.0  # dead work + backoff recovering from failures
     billed_lambda_s: float = 0.0  # Lambda-billed seconds across all attempts
     request_fee_usd: float = 0.0  # per-request fee incl. retried invocations
+    egress_bytes: int = 0  # exchange bytes moved on the overlay this epoch
+    egress_usd: float = 0.0
     invocations: List[InvocationRecord] = field(default_factory=list)
 
 
@@ -219,12 +221,17 @@ class ServerlessExecutor:
         batch_bytes: int,
         epoch: Optional[int] = None,
         peer: Any = 0,
+        egress_bytes: int = 0,
+        usd_per_gb_egress: float = 0.0,
     ) -> ExecutionReport:
         """Account measured instance-side batch times under the runtime.
 
         This is the accounting half of :meth:`run`, usable on its own when
         the math already happened elsewhere (e.g. on the TPU lambda axis:
-        ``P2PTrainer.account_serverless``).
+        ``P2PTrainer.account_serverless``). ``egress_bytes`` is the peer's
+        degree-aware exchange traffic for the epoch (per-edge payload x
+        overlay degree, from ``ExchangeProtocol.wire_bytes``); it is billed
+        at ``usd_per_gb_egress`` on top of the Lambda formula.
         """
         per_batch = [float(t) for t in per_batch_s]
         measured = float(sum(per_batch))
@@ -263,6 +270,8 @@ class ServerlessExecutor:
             num_retries=res.num_retries,
             retry_billed_s=sum(r.failed_s for r in res.invocations),
             cold_start_billed_s=res.cold_start_s_total,
+            egress_bytes=egress_bytes,
+            usd_per_gb_egress=usd_per_gb_egress,
         )
         return ExecutionReport(
             backend="serverless",
@@ -280,6 +289,8 @@ class ServerlessExecutor:
             retry_s=res.retry_s_total,
             billed_lambda_s=res.billed_s_total,
             request_fee_usd=cost.request_fee_usd,
+            egress_bytes=egress_bytes,
+            egress_usd=cost.egress_usd,
             invocations=res.invocations,
         )
 

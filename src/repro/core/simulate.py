@@ -35,8 +35,9 @@ from repro.configs.base import ModelConfig
 from repro.core import compression as C
 from repro.core.convergence import ConvergenceDetector
 from repro.core.cost import CommCost
-from repro.core.events import EventEngine
+from repro.core.events import EventEngine, LinkModel
 from repro.core.exchange import ExchangeContext, ExchangeProtocol, get_exchange
+from repro.core.graph import PeerGraph, get_graph
 from repro.core.mailbox import HostMailbox
 from repro.core.serverless import ExecutionReport, ServerlessExecutor
 from repro.data import DataLoader, Dataset, Partitioner, BatchKey
@@ -88,6 +89,8 @@ class LocalP2PCluster:
         sync: bool = True,
         executor: Optional[ServerlessExecutor] = None,
         exchange: Optional[str] = None,  # registered protocol name
+        graph: Any = "full",  # peer overlay: registered name or PeerGraph
+        graph_seed: Optional[int] = None,  # defaults to `seed`
         qsgd: Optional[C.QSGDConfig] = None,
         topk_frac: float = 0.01,
         network_bandwidth_bps: float = 1e9,  # simulated inter-peer link
@@ -119,11 +122,29 @@ class LocalP2PCluster:
         if exchange is None:
             exchange = "qsgd" if qsgd is not None else "allgather_mean"
         self.protocol: ExchangeProtocol = get_exchange(exchange)
+        # Peer overlay: consumption walks graph edges only, updates use the
+        # graph's Metropolis–Hastings weights (uniform mean on the full
+        # graph — the legacy, bit-exact path).
+        self.graph: PeerGraph = get_graph(
+            graph, num_peers, seed=seed if graph_seed is None else graph_seed
+        )
+        self._mixing = (
+            None if (self.graph.is_full or num_peers <= 1)
+            else self.graph.mixing_matrix()
+        )
+        if self._mixing is not None and not self.protocol.decomposes_per_edge:
+            raise ValueError(
+                f"exchange protocol {self.protocol.name!r} is a fused global "
+                f"collective and only supports graph='full'; got "
+                f"{self.graph.describe()}"
+            )
         self.xctx = ExchangeContext(
             num_peers=num_peers, qsgd=qsgd, topk_frac=topk_frac,
+            graph=self.graph, mixing=self._mixing,
         )
         self.bw = network_bandwidth_bps
-        self.mailbox = HostMailbox(num_peers)
+        self.link = LinkModel(bandwidth_bps=network_bandwidth_bps)
+        self.mailbox = HostMailbox(num_peers, graph=self.graph)
         self.detector = ConvergenceDetector(lr, mode="max", max_epochs=10_000)
         self.key = jax.random.PRNGKey(seed)
         self.churn_prob = churn_prob
@@ -244,7 +265,7 @@ class LocalP2PCluster:
             payload, nbytes = self.protocol.host_encode(grads, self.xctx, key=key)
             msg = (self.protocol.name, payload)
             jax.block_until_ready(jax.tree.leaves(payload))
-            wire_s = nbytes * 8 / self.bw
+            wire_s = self.link.transfer_s(nbytes)
             self.mailbox.publish(
                 peer.rank, msg, nbytes=nbytes, time=at_time + wire_s, epoch=epoch
             )
@@ -253,38 +274,61 @@ class LocalP2PCluster:
         return nbytes
 
     def _consume_all(self, peer: PeerState, own_grads, at_time: Optional[float]):
-        """ConsumeGradientsFromQueue for every other peer (Algorithm 1).
+        """ConsumeGradientsFromQueue along the peer's overlay edges.
 
-        Returns ``(grads_peers, recv_wire_s)``: the consumed gradient set
-        and the receive-side wire time — payload download plus the S3
-        round trip for >100 MB indirected messages — charged against the
-        simulated link (async mode also advances the peer's clock by it).
+        The seed repo walked every other peer (full mesh); consumption now
+        follows ``self.graph.neighbors`` — per-peer download traffic is
+        O(degree), not O(P). Returns ``(grads_peers, recv_wire_s)``: the
+        consumed gradient set and the receive-side wire time — payload
+        download plus the S3 round trip for >100 MB indirected messages —
+        charged against the simulated link (async mode also advances the
+        peer's clock by it).
         """
         grads_peers = {peer.rank: own_grads}
         recv_wire_s = 0.0
         with peer.metrics.stage("receive_gradients"):
-            for other in range(self.num_peers):
-                if other == peer.rank:
-                    continue
-                msg = self.mailbox.consume(other, at_time=at_time)
+            for other in self.graph.neighbors(peer.rank):
+                msg = self.mailbox.consume(
+                    other, at_time=at_time, consumer=peer.rank
+                )
                 if msg is None:
                     continue  # async: nothing published yet -> skip
                 _, payload = msg.payload
                 grads_peers[other] = self.protocol.host_decode(
                     payload, own_grads, self.xctx
                 )
-                wire_s = self.mailbox.download_time_s(msg, self.bw)
+                wire_s = self.mailbox.download_time_s(msg, link=self.link)
                 peer.recv_time_s += wire_s
                 recv_wire_s += wire_s
         return grads_peers, recv_wire_s
 
     def _update(self, peer: PeerState, grads_peers: Dict[int, Any], lr: float):
+        """Mix the consumed gradients and step the peer's optimizer.
+
+        Full graph: plain mean over contributions (legacy, bit-exact).
+        Sparse graph: Metropolis–Hastings weights ``W[r]``, renormalized
+        over the contributions that actually arrived so a not-yet-published
+        (or churned-out) neighbor doesn't shrink the update.
+        """
         with peer.metrics.stage("model_update"):
-            n = len(grads_peers)
-            avg = jax.tree.map(
-                lambda *xs: sum(x.astype(jnp.float32) for x in xs) / n,
-                *grads_peers.values(),
-            )
+            if self._mixing is None:
+                n = len(grads_peers)
+                avg = jax.tree.map(
+                    lambda *xs: sum(x.astype(jnp.float32) for x in xs) / n,
+                    *grads_peers.values(),
+                )
+            else:
+                w = self._mixing[peer.rank]
+                ranks = sorted(grads_peers)
+                total = float(sum(w[j] for j in ranks))
+                avg = jax.tree.map(
+                    lambda *xs: sum(
+                        float(w[j]) * x.astype(jnp.float32)
+                        for j, x in zip(ranks, xs)
+                    )
+                    / total,
+                    *[grads_peers[j] for j in ranks],
+                )
             peer.params, peer.opt_state = self._apply(
                 peer.params, peer.opt_state, avg, jnp.float32(lr)
             )
@@ -292,16 +336,23 @@ class LocalP2PCluster:
         peer.steps_done += 1
 
     def comm_cost(self, *, usd_per_gb: float = 0.0) -> CommCost:
-        """Per-step wire cost of one peer under the active exchange protocol.
+        """Per-step wire cost of one peer under protocol + overlay graph.
 
-        Uses the protocol's host-path accounting, which matches what
-        ``_publish`` actually charges the simulated link.
+        Degree-aware and on the same ``per_edge x degree`` convention as
+        ``P2PTrainer.comm_cost`` — O(degree) for sparse overlays, O(P)
+        for the full mesh. (The cluster's simulated link additionally
+        charges one publish per step — ``_publish`` — on top of the
+        degree-many downloads counted here.)
         """
         grads_like = jax.eval_shape(lambda p: p, self.peers[0].params)
+        per_edge = self.protocol.host_wire_bytes(grads_like, self.xctx)
         return CommCost(
-            wire_bytes_per_step=self.protocol.host_wire_bytes(grads_like, self.xctx),
+            wire_bytes_per_step=int(round(per_edge * self.xctx.degree)),
             bandwidth_bps=self.bw,
             usd_per_gb_egress=usd_per_gb,
+            bytes_per_edge=per_edge,
+            degree=self.xctx.degree,
+            graph_name=self.graph.name,
         )
 
     def evaluate(self, peer_rank: int = 0, *, num_batches: int = 2, epoch: int = 10_000):

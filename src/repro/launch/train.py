@@ -54,6 +54,11 @@ def main(argv=None):
     ap.add_argument("--optimizer", default="adam", choices=["adam", "sgd"])
     ap.add_argument("--exchange", default="allgather_mean",
                     choices=list(available_exchanges()))
+    ap.add_argument("--graph", default="full",
+                    help="peer overlay graph: full | ring | gossip:K | "
+                         "hierarchical[:GROUP] (see repro.core.graph)")
+    ap.add_argument("--graph-seed", type=int, default=0,
+                    help="seed for stochastic overlays (gossip)")
     ap.add_argument("--staleness", type=int, default=1,
                     help="async: consume banks published K steps ago")
     ap.add_argument("--topk-frac", type=float, default=0.01,
@@ -108,6 +113,8 @@ def main(argv=None):
         peer_axes=("data",) if npeers > 1 else (),
         lambda_axis="model" if mesh.shape["model"] > 1 else None,
         exchange=args.exchange,
+        graph=args.graph,
+        graph_seed=args.graph_seed,
         qsgd=QSGDConfig(levels=127, bucket=512) if args.exchange == "qsgd" else None,
         staleness=args.staleness,
         topk_frac=args.topk_frac,
@@ -123,6 +130,7 @@ def main(argv=None):
         print(f"restored checkpoint from {args.restore} (step {int(state.step)})")
     if topo.peer_axes:
         cc = trainer.comm_cost(state.params)
+        print(f"graph: {trainer.graph.describe()}")
         print(f"exchange={topo.exchange_name}: {cc.summary()}")
 
     ds = make_dataset("lm", size=200_000, vocab_size=cfg.vocab_size, seq_len=args.seq)

@@ -54,7 +54,12 @@ class P2PTrainer:
         jit: bool = True,
         runtime: Optional[RuntimeConfig] = None,  # serverless fault/cold-start model
         allocation: Union[str, AllocationPolicy] = "static",  # per-epoch memory sizing
+        graph: Any = None,  # overlay override: name ("ring", "gossip:3") or PeerGraph
     ):
+        import dataclasses as _dc
+
+        if graph is not None:
+            topo = _dc.replace(topo, graph=graph)
         self.cfg = cfg
         self.optimizer = optimizer
         self.topo = topo
@@ -77,6 +82,11 @@ class P2PTrainer:
     @property
     def num_peers(self) -> int:
         return self.ctx.num_peers
+
+    @property
+    def graph(self):
+        """The resolved :class:`~repro.core.graph.PeerGraph` overlay."""
+        return self.ctx.graph
 
     # -- state ---------------------------------------------------------------
     def init_state(self, key: jax.Array) -> TrainState:
@@ -106,11 +116,23 @@ class P2PTrainer:
         self, params_like=None, *, bandwidth_bps: float = 1e9,
         usd_per_gb: float = 0.0,
     ) -> CommCost:
-        """Per-step exchange cost, straight from the protocol's byte counts."""
+        """Per-step exchange cost, straight from the protocol's byte counts
+        (degree-aware: per-edge payload x the overlay graph's degree)."""
+        if params_like is None:
+            params_like = jax.eval_shape(
+                lambda: init_train_state(jax.random.PRNGKey(0), self.cfg,
+                                         self.optimizer)
+            ).params
         return CommCost(
-            wire_bytes_per_step=self.wire_bytes_per_step(params_like),
+            wire_bytes_per_step=self.protocol.wire_bytes(params_like, self.ctx),
             bandwidth_bps=bandwidth_bps,
             usd_per_gb_egress=usd_per_gb,
+            bytes_per_edge=(
+                self.protocol.wire_bytes_per_edge(params_like, self.ctx)
+                if self.protocol.decomposes_per_edge else 0
+            ),
+            degree=self.ctx.degree,
+            graph_name=self.ctx.graph.name if self.ctx.graph is not None else "full",
         )
 
     @property
@@ -133,6 +155,8 @@ class P2PTrainer:
         batch_bytes: int = 0,
         epoch: Optional[int] = None,
         peer: Any = 0,
+        egress_bytes: int = 0,  # e.g. steps x comm_cost().wire_bytes_per_step
+        usd_per_gb_egress: float = 0.0,
     ) -> ExecutionReport:
         """Price measured per-batch times under the serverless runtime.
 
@@ -159,6 +183,8 @@ class P2PTrainer:
             batch_bytes=batch_bytes,
             epoch=epoch,
             peer=peer,
+            egress_bytes=egress_bytes,
+            usd_per_gb_egress=usd_per_gb_egress,
         )
 
     # -- checkpointing -------------------------------------------------------

@@ -58,21 +58,33 @@ def test_wire_byte_accounting():
     n = 128 * 64 + 100
     ctx = ExchangeContext(num_peers=4, qsgd=QSGDConfig(levels=127, bucket=128),
                           topk_frac=0.1)
-    raw = get_exchange("allgather_mean").wire_bytes(grads, ctx)
+    # per-edge payload is the old publish-side figure; the per-peer total
+    # scales by the overlay degree (no graph set => full mesh, P-1 = 3)
+    raw = get_exchange("allgather_mean").wire_bytes_per_edge(grads, ctx)
     assert raw == n * 4
-    # ring all-reduce: 2(P-1)/P of raw on-device; the host mailbox ships dense
+    assert get_exchange("allgather_mean").wire_bytes(grads, ctx) == 3 * raw
+    # ring all-reduce: fused collective, 2(P-1)/P of raw regardless of
+    # degree; the host mailbox publishes the dense payload
     assert get_exchange("psum_mean").wire_bytes(grads, ctx) == int(raw * 2 * 3 / 4)
     assert get_exchange("psum_mean").host_wire_bytes(grads, ctx) == raw
-    # qsgd: ~1 byte/elt + norms, > 3x compression
-    q = get_exchange("qsgd").wire_bytes(grads, ctx)
+    assert not get_exchange("psum_mean").decomposes_per_edge
+    # qsgd: ~1 byte/elt + norms, > 3x compression (per edge)
+    q = get_exchange("qsgd").wire_bytes_per_edge(grads, ctx)
     assert q < raw / 3
-    # topk: k entries x (4B value + 4B index)
-    t = get_exchange("topk").wire_bytes(grads, ctx)
+    assert get_exchange("qsgd").wire_bytes(grads, ctx) == 3 * q
+    # topk: k entries x (4B value + 4B index) per edge
+    t = get_exchange("topk").wire_bytes_per_edge(grads, ctx)
     expect = (round(128 * 64 * 0.1)) * 8 + (round(100 * 0.1)) * 8
     assert t == expect
     # bf16 wire dtype halves value bytes
     half = ExchangeContext(num_peers=4, wire_dtype=jnp.bfloat16)
-    assert get_exchange("allgather_mean").wire_bytes(grads, half) == n * 2
+    assert get_exchange("allgather_mean").wire_bytes_per_edge(grads, half) == n * 2
+    # a sparse overlay shrinks the per-peer total: ring degree is 2
+    from repro.core.graph import get_graph
+
+    rg = get_graph("ring", 8)
+    rctx = ExchangeContext(num_peers=8, graph=rg, mixing=rg.mixing_matrix())
+    assert get_exchange("allgather_mean").wire_bytes(grads, rctx) == 2 * n * 4
 
 
 def test_qsgd_host_roundtrip_close():

@@ -34,7 +34,7 @@ def test_async_mailbox_exchange_multidevice():
                  "seq": None}
 
         # async topology with a staleness-1 mailbox ring in the train state
-        topo = Topology(peer_axes=("data",), lambda_axis="model", async_mode=True)
+        topo = Topology(peer_axes=("data",), lambda_axis="model", exchange="async")
         astate = state.replace(mailbox=init_mailbox(state.params, 4))
         step_a = build_train_step(cfg, opt, topo, mesh, constant(1e-2))
 
@@ -62,7 +62,7 @@ def test_async_mailbox_exchange_multidevice():
         # staleness-2: the bank consumed at step t was published at t-2, so
         # after one step the ring's oldest slot is still the zero bank and
         # the fresh bank sits in slot 1
-        topo2 = Topology(peer_axes=("data",), lambda_axis="model", async_mode=True,
+        topo2 = Topology(peer_axes=("data",), lambda_axis="model", exchange="async",
                          staleness=2)
         astate2 = state.replace(mailbox=init_mailbox(state.params, 4, staleness=2))
         step_2 = build_train_step(cfg, opt, topo2, mesh, constant(1e-2))
