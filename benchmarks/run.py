@@ -25,6 +25,7 @@ def main() -> None:
         fig6_sync_async,
         fig7_faults_coldstart,
         fig8_topology_scaling,
+        fig9_sharded_aggregation,
         roofline,
         table1_resource_stages,
         table2_3_cost,
@@ -40,6 +41,7 @@ def main() -> None:
         "fig6": fig6_sync_async,
         "fig7": fig7_faults_coldstart,
         "fig8": fig8_topology_scaling,
+        "fig9": fig9_sharded_aggregation,
         "roofline": roofline,
     }
     if args.only:

@@ -30,6 +30,8 @@ for n in available_graphs():
   python -m benchmarks.run --only fig7
   echo "== smoke: overlay topology scaling (Fig. 8) =="
   python -m benchmarks.run --only fig8
+  echo "== smoke: sharded aggregation (Fig. 9) =="
+  python -m benchmarks.run --only fig9
 }
 
 if [[ "${1:-}" == "--fast" ]]; then

@@ -43,6 +43,7 @@ from repro.core.events import (
     register_allocation,
 )
 from repro.core.mailbox import HostMailbox
+from repro.core.shard import ShardPlan
 from repro.core.serverless import (
     ExecutionReport,
     ServerlessExecutor,
@@ -91,6 +92,7 @@ __all__ = [
     "get_allocation",
     "register_allocation",
     "HostMailbox",
+    "ShardPlan",
     "ExecutionReport",
     "ServerlessExecutor",
     "ServerlessPlanner",

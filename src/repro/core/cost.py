@@ -124,6 +124,11 @@ class CommCost:
     bytes_per_edge: int = 0  # payload per overlay edge; 0 = fused/unknown
     degree: float = 0.0  # mean neighbor count under the overlay graph
     graph_name: str = "full"
+    # Sharded exchange (reduce_scatter): the per-edge payload is ONE shard
+    # of the flattened gradient buffer — model/P bytes — so it shrinks as
+    # 1/P while dense protocols stay flat. num_shards=1 marks unsharded.
+    num_shards: int = 1
+    shard_bytes: int = 0  # one shard's wire payload; 0 = unsharded
 
     @property
     def seconds_per_step(self) -> float:
@@ -143,6 +148,11 @@ class CommCost:
             s += (
                 f" [{self.graph_name} graph: {self.bytes_per_edge/1e6:.2f} MB"
                 f"/edge x degree {self.degree:g}]"
+            )
+        if self.num_shards > 1:
+            s += (
+                f" [sharded: {self.num_shards} shards x "
+                f"{self.shard_bytes/1e6:.2f} MB]"
             )
         return s
 

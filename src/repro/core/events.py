@@ -170,6 +170,7 @@ class InvocationRecord:
     start_s: float = 0.0  # first attempt's start
     end_s: float = 0.0  # successful completion
     exec_s: float = 0.0  # successful attempt's execution (incl. straggler factor)
+    download_s: float = 0.0  # payload fetch time (e.g. shard pieces from S3)
     queue_wait_s: float = 0.0  # total time spent throttled, all attempts
     cold_start_s: float = 0.0  # container init time burned, all attempts
     cold_starts: int = 0
@@ -291,6 +292,8 @@ class ServerlessRuntime:
         invoke_overhead_s: float = 0.0,
         timeout_s: Optional[float] = None,
         submit_time: Optional[float] = None,
+        download_bytes: Optional[Sequence[int]] = None,
+        link: Optional[LinkModel] = None,
     ) -> FanoutResult:
         """Simulate one fan-out of ``len(exec_times_s)`` invocations.
 
@@ -298,8 +301,11 @@ class ServerlessRuntime:
         scaled to the memory tier's vCPU share). ``submit_time`` defaults
         to the runtime's own clock, which advances past each fan-out — so
         containers freed by one epoch are warm (within the keepalive TTL)
-        for the next. Returns the makespan and per-invocation stage
-        records; all record times are absolute on the runtime clock.
+        for the next. ``download_bytes`` (with ``link``) charges each
+        invocation a payload fetch — e.g. a sharded aggregator downloading
+        its P-1 shard pieces before reducing them — billed like execution
+        and re-paid on retries. Returns the makespan and per-invocation
+        stage records; all record times are absolute on the runtime clock.
         """
         cfg = self.config
         if submit_time is None:
@@ -343,7 +349,10 @@ class ServerlessRuntime:
             init_s = cfg.cold_start_s if cold else 0.0
             if cold:
                 rec.cold_starts += 1
-            exec_s = exec_times_s[i] * rec.straggler_factor
+            dl_s = 0.0
+            if download_bytes is not None and link is not None:
+                dl_s = link.transfer_s(int(download_bytes[i]))
+            exec_s = exec_times_s[i] * rec.straggler_factor + dl_s
             duration = init_s + invoke_overhead_s + exec_s
             out_of_retries = rec.attempts > cfg.max_retries
             timed_out = timeout_s is not None and duration > timeout_s
@@ -384,6 +393,7 @@ class ServerlessRuntime:
                 return
             rec.cold_start_s += init_s
             rec.exec_s = exec_s
+            rec.download_s = dl_s
             rec.billed_s += duration
 
             def complete(i=i, duration=duration):

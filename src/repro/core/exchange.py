@@ -50,6 +50,7 @@ import numpy as np
 from jax import lax
 
 from repro.core import compression as C
+from repro.core.shard import ShardPlan
 
 
 @dataclass(frozen=True)
@@ -78,6 +79,19 @@ class ExchangeContext:
     graph: Any = None  # resolved repro.core.graph.PeerGraph, or None
     mixing: Any = None  # (P, P) fp32 MH matrix; None => uniform 1/P (full)
 
+    def __post_init__(self):
+        # A graph sized for a different peer count silently mis-mixes (the
+        # MH matrix rows no longer line up with mesh ranks) — refuse here,
+        # at construction, with an actionable message.
+        gp = getattr(self.graph, "num_peers", None)
+        if gp is not None and gp != self.num_peers:
+            raise ValueError(
+                f"ExchangeContext(num_peers={self.num_peers}) does not match "
+                f"its overlay graph, which was built for {gp} peers "
+                f"({self.graph.describe()}); resolve the graph for the "
+                f"actual peer count (get_graph(spec, num_peers))"
+            )
+
     @property
     def degree(self) -> float:
         """Mean neighbor count of one peer — (P-1) when no graph is set."""
@@ -98,6 +112,8 @@ class ExchangeProtocol(abc.ABC):
     is_async: ClassVar[bool] = False  # consumes stale mailbox state
     requires_key: ClassVar[bool] = False  # needs an rng key (stochastic codec)
     decomposes_per_edge: ClassVar[bool] = True  # False: fused collective
+    requires_full_graph: ClassVar[bool] = False  # True: refuses sparse overlays
+    sharded: ClassVar[bool] = False  # True: shards, not pytrees, on the wire
 
     # -- device path --------------------------------------------------------
     def init_state(self, grads_like, ctx: ExchangeContext):
@@ -439,3 +455,101 @@ class StalenessMailbox(ExchangeProtocol):
             lambda ring, f: jnp.concatenate([ring[1:], f[None]], axis=0), state, fresh
         )
         return avg, new_state
+
+
+@register_exchange("reduce_scatter")
+class ReduceScatterMean(ExchangeProtocol):
+    """Sharded mean: ring reduce-scatter + allgather over contiguous shards.
+
+    The LambdaML/SPIRT communication pattern brought into the registry:
+    the gradient pytree flattens into one buffer (:class:`ShardPlan`),
+    peer ``r`` ends up owning the fully-reduced shard ``r`` after ``P-1``
+    ``ppermute`` ring hops, divides by ``P``, and an allgather of the
+    owned shards reconstructs the global mean everywhere. Shards — not
+    whole pytrees — are the unit of exchange, so the per-edge payload is
+    ``model / P`` and each peer's aggregation work is ``O(model / P)``
+    per contribution instead of ``O(model)``.
+
+    Bit-math: the reduced buffer equals the peer mean (summation order
+    differs from ``mean(axis=0)`` only by float re-association), so the
+    full-graph result matches ``allgather_mean`` to ~1e-6 — the safety
+    rail the equivalence tests pin down on device and host. The shard
+    layout is inherently global (shard ``r`` aggregates over ALL peers),
+    so sparse overlays are refused, like ``psum_mean``.
+
+    Host image: peers publish shard-addressed *pieces* to the mailbox,
+    each owner aggregates only its shard and re-broadcasts it — P
+    aggregators that run as parallel serverless invocations (see
+    ``ServerlessExecutor.simulate_aggregation``), with Lambda memory
+    sized from shard bytes instead of model bytes.
+    """
+
+    requires_full_graph = True
+    sharded = True
+
+    def plan(self, grads_like, ctx: ExchangeContext) -> ShardPlan:
+        """The shard layout for this peer count — one shard per peer."""
+        return ShardPlan.for_tree(grads_like, max(int(ctx.num_peers), 1))
+
+    def _check_full(self, ctx: ExchangeContext):
+        if ctx.mixing is not None:
+            raise ValueError(
+                "reduce_scatter shards are aggregated over ALL peers and "
+                "the protocol only supports graph='full'; use "
+                "allgather_mean (or qsgd/topk) for sparse overlays"
+            )
+
+    # -- device path ---------------------------------------------------------
+    def combine(self, grads, ctx, *, key=None, state=None):
+        self._check_full(ctx)
+        P_ = int(ctx.num_peers)
+        plan = self.plan(grads, ctx)
+        buf = plan.shards(grads).astype(jnp.float32)  # (P, S)
+        if P_ == 1:
+            return plan.unflatten(buf), state
+        r = lax.axis_index(ctx.axis)
+        perm = [(i, (i + 1) % P_) for i in range(P_)]
+
+        def take(c):
+            return lax.dynamic_index_in_dim(buf, c, axis=0, keepdims=False)
+
+        # Ring reduce-scatter: after P-1 hops rank r holds sum_j shard_r(j).
+        # Invariant: before hop s, the carried partial covers shard
+        # (r - 1 - s) mod P over peers {r-s, ..., r}; each hop forwards the
+        # partial one rank clockwise and the receiver adds its own piece.
+        acc = take(jnp.mod(r - 1, P_))
+        for s in range(P_ - 1):
+            acc = lax.ppermute(acc.astype(ctx.wire_dtype), ctx.axis, perm)
+            acc = acc.astype(jnp.float32) + take(jnp.mod(r - 2 - s, P_))
+        own = acc / P_  # rank r owns the fully-reduced (mean) shard r
+        # Allgather phase: rank j contributes reduced shard j, so the
+        # gathered bank rows are already in shard-index order.
+        bank = lax.all_gather(own.astype(ctx.wire_dtype), ctx.axis)
+        return plan.unflatten(bank.astype(jnp.float32)), state
+
+    # -- host path (shard-addressed) -----------------------------------------
+    def host_encode_shard(self, shard_values, ctx: ExchangeContext, *, key=None):
+        """One shard row -> (wire payload, wire bytes)."""
+        wire = jnp.asarray(shard_values).astype(ctx.wire_dtype)
+        return wire, int(wire.size * jnp.dtype(ctx.wire_dtype).itemsize)
+
+    def host_decode_shard(self, payload, ctx: ExchangeContext):
+        """Wire shard payload -> fp32 shard row."""
+        return jnp.asarray(payload).astype(jnp.float32)
+
+    # -- accounting ----------------------------------------------------------
+    def wire_bytes_per_edge(self, grads_like, ctx) -> int:
+        """One shard crosses one edge: ``model / P`` bytes — the payload
+        figure that shrinks as 1/P while dense protocols stay flat."""
+        return self.plan(grads_like, ctx).shard_bytes(ctx.wire_dtype)
+
+    def wire_bytes(self, grads_like, ctx) -> int:
+        """Ring reduce-scatter + allgather: (P-1) shard sends per phase."""
+        P_ = max(int(ctx.num_peers), 1)
+        return 2 * (P_ - 1) * self.wire_bytes_per_edge(grads_like, ctx)
+
+    def host_wire_bytes(self, grads_like, ctx) -> int:
+        """Mailbox publishes per step: P-1 shard pieces (one per other
+        owner) + this peer's re-broadcast aggregated shard."""
+        P_ = max(int(ctx.num_peers), 1)
+        return P_ * self.wire_bytes_per_edge(grads_like, ctx)

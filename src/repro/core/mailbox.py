@@ -33,7 +33,7 @@ class Message:
 
 
 class HostMailbox:
-    """One latest-wins queue per peer + a synchronization barrier queue.
+    """One latest-wins register per (peer, shard) + a barrier queue.
 
     ``graph`` (a :class:`repro.core.graph.PeerGraph`) restricts deliveries
     to overlay edges: a consumer identifying itself via ``consume(...,
@@ -41,6 +41,19 @@ class HostMailbox:
     non-neighbors return ``None`` and count in ``stats["blocked"]``. With
     no graph (or an anonymous consumer) the mailbox behaves like the
     paper's fully-connected broker.
+
+    ``shard`` addresses sub-queues within a peer's mailbox — the sharded
+    exchange publishes one *piece* message per shard owner plus one
+    aggregated-shard broadcast, so a peer's queue space is a small fixed
+    set of registers, not one monolithic gradient slot.
+
+    Memory stays bounded by construction: publishes REPLACE the register
+    (never append), so the live message count is at most ``num_peers x
+    shard-tags`` regardless of how many epochs run. A publish that lands
+    on a register already holding a message from the SAME epoch compacts
+    it (latest wins within the (peer, epoch) cell) and counts in
+    ``stats["compacted"]`` — the signal that producers are re-publishing
+    faster than consumers drain.
     """
 
     def __init__(
@@ -49,26 +62,45 @@ class HostMailbox:
         self.num_peers = num_peers
         self.s3_rtt_s = s3_rtt_s
         self.graph = graph
-        self._queues: List[Optional[Message]] = [None] * num_peers
+        # (peer, shard) -> latest message; shard=None is the classic
+        # whole-gradient register
+        self._queues: Dict[Tuple[int, Any], Message] = {}
         self._barrier: List[Tuple[int, int]] = []  # (peer, epoch) completions
         self.stats = {
             "publishes": 0, "consumes": 0, "s3_indirections": 0, "blocked": 0,
+            "compacted": 0,
         }
         # (consumer, producer) pairs actually delivered — lets tests assert
         # every delivery rode a graph edge, churn or not
         self.delivered_edges: set = set()
 
     # -- gradient queues ---------------------------------------------------
-    def publish(self, peer: int, payload: Any, *, nbytes: int, time: float, epoch: int):
+    def publish(
+        self, peer: int, payload: Any, *, nbytes: int, time: float, epoch: int,
+        shard: Any = None,
+    ):
+        if not 0 <= peer < self.num_peers:
+            raise IndexError(f"peer {peer} out of range [0, {self.num_peers})")
         via_s3 = nbytes > MESSAGE_CAP_BYTES
         msg = Message(
             payload, time, epoch, nbytes=nbytes,
             via_s3=via_s3, s3_uuid=str(uuid.uuid4()) if via_s3 else None,
         )
-        self._queues[peer] = msg  # replaces the previous message (latest wins)
+        key = (peer, shard)
+        prev = self._queues.get(key)
+        if prev is not None and prev.epoch == epoch:
+            # latest-wins compaction within the (peer, epoch) cell
+            self.stats["compacted"] += 1
+        self._queues[key] = msg  # replaces the previous message (latest wins)
         self.stats["publishes"] += 1
         if via_s3:
             self.stats["s3_indirections"] += 1
+
+    @property
+    def live_messages(self) -> int:
+        """Registers currently holding a message — bounded by peers x shards,
+        NOT by epochs run (replacement, not append)."""
+        return len(self._queues)
 
     def download_time_s(
         self, msg: Message, bandwidth_bps: Optional[float] = None, *, link=None
@@ -92,12 +124,16 @@ class HostMailbox:
         *,
         at_time: Optional[float] = None,
         consumer: Optional[int] = None,
+        shard: Any = None,
     ) -> Optional[Message]:
         """Read (without deleting) peer's latest message visible at `at_time`.
 
         ``consumer`` identifies the reading peer; when the mailbox carries
-        an overlay graph, reads across non-edges are refused.
+        an overlay graph, reads across non-edges are refused. ``shard``
+        selects a shard-addressed register (see :meth:`publish`).
         """
+        if not 0 <= peer < self.num_peers:
+            raise IndexError(f"peer {peer} out of range [0, {self.num_peers})")
         if (
             self.graph is not None
             and consumer is not None
@@ -106,7 +142,7 @@ class HostMailbox:
         ):
             self.stats["blocked"] += 1
             return None
-        msg = self._queues[peer]
+        msg = self._queues.get((peer, shard))
         self.stats["consumes"] += 1
         if msg is None:
             return None

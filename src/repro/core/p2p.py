@@ -127,11 +127,19 @@ def exchange_context(
         if (graph.is_full or num_peers <= 1)
         else graph.mixing_matrix().astype(np.float32)
     )
-    if mixing is not None and not topo.protocol().decomposes_per_edge:
+    proto = topo.protocol()
+    if mixing is not None and (
+        not proto.decomposes_per_edge or proto.requires_full_graph
+    ):
         # fail at construction, not inside the first jitted step trace
+        kind = (
+            "a sharded global reduce-scatter"
+            if proto.requires_full_graph and proto.decomposes_per_edge
+            else "a fused global collective"
+        )
         raise ValueError(
-            f"exchange protocol {topo.exchange_name!r} is a fused global "
-            f"collective and only supports graph='full'; got "
+            f"exchange protocol {topo.exchange_name!r} is {kind} "
+            f"and only supports graph='full'; got "
             f"{graph.describe()}"
         )
     return ExchangeContext(
@@ -269,14 +277,25 @@ def exchange_gradients(
     """
     if not topo.peer_axes:
         return grads, mailbox
+    inferred = _mailbox_peers(mailbox)
     if num_peers is None:
-        num_peers = _mailbox_peers(mailbox)
+        num_peers = inferred
         if num_peers is None:
             raise ValueError(
                 "exchange_gradients needs num_peers=...: it cannot be "
                 "inferred without an async mailbox state (and graph-local "
                 "state need not span all peers)"
             )
+    elif inferred is not None and inferred != num_peers:
+        raise ValueError(
+            f"exchange_gradients got num_peers={num_peers} but the async "
+            f"mailbox state spans {inferred} peers; the mixing weights "
+            f"would silently mis-align — rebuild the mailbox for "
+            f"{num_peers} peers or pass the matching count"
+        )
+    # exchange_context -> ExchangeContext.__post_init__ validates that the
+    # resolved overlay graph matches num_peers, raising a clear error
+    # instead of silently mis-mixing.
     ctx = exchange_context(topo, num_peers=num_peers)
     return topo.protocol().combine(grads, ctx, key=key, state=mailbox)
 

@@ -162,6 +162,7 @@ class ExecutionReport:
     request_fee_usd: float = 0.0  # per-request fee incl. retried invocations
     egress_bytes: int = 0  # exchange bytes moved on the overlay this epoch
     egress_usd: float = 0.0
+    download_s: float = 0.0  # payload fetch time (sharded aggregator pieces)
     invocations: List[InvocationRecord] = field(default_factory=list)
 
 
@@ -291,6 +292,90 @@ class ServerlessExecutor:
             request_fee_usd=cost.request_fee_usd,
             egress_bytes=egress_bytes,
             egress_usd=cost.egress_usd,
+            invocations=res.invocations,
+        )
+
+    def simulate_aggregation(
+        self,
+        per_shard_s: Sequence[float],
+        *,
+        shard_bytes: int,
+        num_contributions: int,
+        epoch: Optional[int] = None,
+        peer: Any = "aggregate",
+        link=None,
+        usd_per_gb_egress: float = 0.0,
+    ) -> ExecutionReport:
+        """Price P parallel serverless aggregators under the runtime engine.
+
+        The sharded-exchange aggregation stage (SPIRT / LambdaML): one
+        Lambda invocation PER SHARD, all submitted concurrently, each
+        downloading its ``num_contributions - 1`` foreign shard pieces
+        (charged via ``link``) and reducing ``shard_bytes`` worth of
+        parameters per contribution. Cold starts, stragglers, concurrency
+        caps, and retries apply per shard; the
+        :class:`~repro.core.events.AllocationPolicy` sizes aggregator
+        memory from SHARD bytes — not model bytes — so doubling the peer
+        count halves both the aggregation makespan and the memory tier.
+
+        ``per_shard_s`` are instance-side measured reduce times, one per
+        shard (``len(per_shard_s)`` = the shard count P).
+        """
+        per_shard = [float(t) for t in per_shard_s]
+        key = ("agg", peer)
+        if epoch is None:
+            epoch = len(self.history.get(key, ()))
+        # Aggregator footprint: the shard accumulator + one incoming piece
+        # + runtime — the planner's model slot holds the shard, not the
+        # model, which is the whole point of sharding the aggregation.
+        planned = self.planner.lambda_memory_mb(
+            model_bytes=int(shard_bytes), batch_bytes=int(shard_bytes)
+        )
+        mem = self._memory_mb(planned, epoch, key)
+        speed = lambda_speedup(mem, self.instance_vcpus)
+        dl_bytes = max(num_contributions - 1, 0) * int(shard_bytes)
+        res = self.runtime.fanout(
+            [t / speed for t in per_shard],
+            memory_mb=mem,
+            function_key=key,
+            invoke_overhead_s=self.invoke_overhead_s,
+            timeout_s=LAMBDA_TIMEOUT_S,
+            download_bytes=[dl_bytes] * len(per_shard),
+            link=link,
+        )
+        self.history.setdefault(key, []).append(res)
+        wall = self.orchestration_overhead_s + res.makespan_s
+        egress_bytes = dl_bytes * len(per_shard)
+        cost = ServerlessCost(
+            compute_time_s=wall,
+            num_batches=len(per_shard),
+            lambda_memory_mb=mem,
+            instance=self.instance,
+            num_retries=res.num_retries,
+            retry_billed_s=sum(r.failed_s for r in res.invocations),
+            cold_start_billed_s=res.cold_start_s_total,
+            egress_bytes=egress_bytes,
+            usd_per_gb_egress=usd_per_gb_egress,
+        )
+        return ExecutionReport(
+            backend="serverless",
+            wall_time_s=wall,
+            measured_compute_s=float(sum(per_shard)),
+            per_batch_s=per_shard,
+            num_batches=len(per_shard),
+            lambda_memory_mb=mem,
+            cost_usd=cost.cost_per_peer,
+            epoch=epoch,
+            num_cold_starts=res.num_cold_starts,
+            cold_start_s=res.cold_start_s_total,
+            queue_wait_s=res.queue_wait_s_total,
+            num_retries=res.num_retries,
+            retry_s=res.retry_s_total,
+            billed_lambda_s=res.billed_s_total,
+            request_fee_usd=cost.request_fee_usd,
+            egress_bytes=egress_bytes,
+            egress_usd=cost.egress_usd,
+            download_s=sum(r.download_s for r in res.invocations),
             invocations=res.invocations,
         )
 

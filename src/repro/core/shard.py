@@ -1,0 +1,168 @@
+"""ShardPlan — contiguous gradient sharding, the unit of sharded exchange.
+
+SPIRT (arXiv:2309.14148) partitions model updates so each peer aggregates
+only its shard; LambdaML (arXiv:2105.07806) shows scatter-reduce-style
+aggregation is the winning communication pattern for serverless training.
+Both need the same primitive: a deterministic, shape-preserving mapping
+between a gradient pytree and ``P`` equal-size contiguous shards. That
+mapping is a :class:`ShardPlan`:
+
+* **flatten** — every leaf is raveled (C order), cast to a common buffer
+  dtype (the NumPy promotion of all leaf dtypes, so no leaf loses
+  precision), and concatenated into ONE contiguous buffer, zero-padded to
+  a multiple of ``num_shards``.
+* **shard** — the padded buffer splits into ``num_shards`` equal
+  contiguous rows, ``shards[i] = buffer[i*S : (i+1)*S]``; shard ``i`` is
+  owned by peer ``i`` under the sharded exchange protocols.
+* **unflatten** — the exact inverse: slice each leaf's ``[offset,
+  offset+size)`` range back out, reshape, and cast to the original leaf
+  dtype. ``unflatten(shards(tree)) == tree`` bit-for-bit as long as the
+  buffer dtype can represent every leaf value (always true for the float
+  promotions used here; property-tested in ``tests/test_shard.py``).
+
+The plan is built once from *shapes* (arrays or ``ShapeDtypeStruct``s) and
+is pure static metadata, so it is free to construct inside a jitted trace
+— the device ``reduce_scatter`` protocol builds one per ``combine`` call —
+and equally usable on the host path, where the mailbox carries
+shard-addressed messages and the cost model prices shard-sized payloads.
+
+Padding edge case worth noting: with more shards than parameters
+(``P > total``) the element shard size is 1 and the trailing shards are
+pure padding — exchanged, aggregated, and then dropped by ``unflatten``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ShardPlan:
+    """Static metadata mapping one pytree <-> ``num_shards`` contiguous shards."""
+
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[Any, ...]
+    offsets: Tuple[int, ...]  # element offset of each leaf in the buffer
+    total: int  # unpadded element count across all leaves
+    num_shards: int
+    shard_size: int  # elements per shard (padded; equal for every shard)
+    buffer_dtype: Any  # promoted dtype every leaf roundtrips through
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def for_tree(cls, tree_like, num_shards: int) -> "ShardPlan":
+        """Build a plan from a pytree of arrays / ShapeDtypeStructs."""
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+        shapes = tuple(tuple(int(d) for d in x.shape) for x in leaves)
+        dtypes = tuple(jnp.dtype(x.dtype) for x in leaves)
+        sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+        offsets, off = [], 0
+        for n in sizes:
+            offsets.append(off)
+            off += n
+        total = off
+        buffer_dtype = (
+            functools.reduce(jnp.promote_types, dtypes)
+            if dtypes
+            else jnp.dtype(jnp.float32)
+        )
+        shard_size = math.ceil(total / num_shards) if total else 0
+        return cls(
+            treedef=treedef,
+            shapes=shapes,
+            dtypes=dtypes,
+            offsets=tuple(offsets),
+            total=total,
+            num_shards=int(num_shards),
+            shard_size=shard_size,
+            buffer_dtype=jnp.dtype(buffer_dtype),
+        )
+
+    # -- derived sizes -------------------------------------------------------
+    @property
+    def sizes(self) -> Tuple[int, ...]:
+        return tuple(int(np.prod(s)) if s else 1 for s in self.shapes)
+
+    @property
+    def padded_size(self) -> int:
+        return self.num_shards * self.shard_size
+
+    @property
+    def pad(self) -> int:
+        """Zero elements appended so every shard is exactly ``shard_size``."""
+        return self.padded_size - self.total
+
+    def shard_slice(self, i: int) -> Tuple[int, int]:
+        """Element range ``[start, stop)`` of shard ``i`` in the buffer."""
+        if not 0 <= i < self.num_shards:
+            raise IndexError(f"shard {i} out of range [0, {self.num_shards})")
+        return i * self.shard_size, (i + 1) * self.shard_size
+
+    def shard_bytes(self, wire_dtype: Optional[Any] = None) -> int:
+        """Bytes of ONE shard on the wire — the sharded per-edge payload
+        and the figure aggregator memory is sized from (O(model / P))."""
+        dt = jnp.dtype(wire_dtype) if wire_dtype is not None else self.buffer_dtype
+        return self.shard_size * dt.itemsize
+
+    # -- flatten / shard -----------------------------------------------------
+    def flatten(self, tree) -> jnp.ndarray:
+        """Pytree -> one contiguous padded 1-D buffer (``buffer_dtype``)."""
+        leaves = jax.tree_util.tree_leaves(tree)
+        if len(leaves) != len(self.shapes):
+            raise ValueError(
+                f"tree has {len(leaves)} leaves, plan was built for "
+                f"{len(self.shapes)}"
+            )
+        if not leaves:
+            return jnp.zeros((self.padded_size,), self.buffer_dtype)
+        flat = jnp.concatenate(
+            [jnp.ravel(x).astype(self.buffer_dtype) for x in leaves]
+        )
+        if self.pad:
+            flat = jnp.concatenate(
+                [flat, jnp.zeros((self.pad,), self.buffer_dtype)]
+            )
+        return flat
+
+    def shards(self, tree) -> jnp.ndarray:
+        """Pytree -> ``(num_shards, shard_size)``; row ``i`` is shard ``i``."""
+        return self.flatten(tree).reshape(self.num_shards, self.shard_size)
+
+    # -- unflatten -----------------------------------------------------------
+    def unflatten(self, buffer) -> Any:
+        """Inverse of :meth:`flatten` / :meth:`shards`.
+
+        Accepts the 1-D padded buffer or the ``(num_shards, shard_size)``
+        stack; padding is dropped, every leaf is reshaped and cast back to
+        its original dtype.
+        """
+        buf = jnp.asarray(buffer).reshape(-1)
+        if buf.shape[0] != self.padded_size:
+            raise ValueError(
+                f"buffer has {buf.shape[0]} elements, plan expects "
+                f"{self.padded_size} (= {self.num_shards} x {self.shard_size})"
+            )
+        leaves = []
+        for shape, dtype, off, n in zip(
+            self.shapes, self.dtypes, self.offsets, self.sizes
+        ):
+            leaf = jax.lax.dynamic_slice_in_dim(buf, off, n).reshape(shape)
+            leaves.append(leaf.astype(dtype))
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def describe(self) -> str:
+        return (
+            f"ShardPlan(P={self.num_shards}, {self.total} elems -> "
+            f"{self.shard_size}/shard (+{self.pad} pad), "
+            f"buffer={self.buffer_dtype.name}, "
+            f"{self.shard_bytes()} B/shard)"
+        )

@@ -132,11 +132,27 @@ class LocalP2PCluster:
             None if (self.graph.is_full or num_peers <= 1)
             else self.graph.mixing_matrix()
         )
-        if self._mixing is not None and not self.protocol.decomposes_per_edge:
+        if self._mixing is not None and (
+            not self.protocol.decomposes_per_edge
+            or self.protocol.requires_full_graph
+        ):
+            kind = (
+                "a sharded global reduce-scatter"
+                if self.protocol.requires_full_graph
+                and self.protocol.decomposes_per_edge
+                else "a fused global collective"
+            )
             raise ValueError(
-                f"exchange protocol {self.protocol.name!r} is a fused global "
-                f"collective and only supports graph='full'; got "
+                f"exchange protocol {self.protocol.name!r} is {kind} "
+                f"and only supports graph='full'; got "
                 f"{self.graph.describe()}"
+            )
+        if self.protocol.sharded and not sync:
+            raise ValueError(
+                f"exchange protocol {self.protocol.name!r} is a barriered "
+                "sharded exchange (scatter -> aggregate -> re-broadcast) and "
+                "only runs in sync mode; use exchange='async' for "
+                "asynchronous epochs"
             )
         self.xctx = ExchangeContext(
             num_peers=num_peers, qsgd=qsgd, topk_frac=topk_frac,
@@ -196,6 +212,14 @@ class LocalP2PCluster:
         self._eval = _eval
 
         self._model_bytes = sum(x.size * 4 for x in jax.tree.leaves(init_params))
+        # Sharded exchange: one contiguous shard per peer (gradients share
+        # the params' structure), plus the per-epoch parallel-aggregation
+        # reports when a serverless executor prices the aggregators.
+        self.shard_plan = (
+            self.protocol.plan(init_params, self.xctx)
+            if self.protocol.sharded else None
+        )
+        self.aggregation_reports: List[ExecutionReport] = []
 
         # Warm the jit caches so stage timings measure compute, not compilation.
         wb = jax.tree.map(jnp.asarray, self.peers[0].loader.load(BatchKey(0, 0, 0)))
@@ -329,11 +353,118 @@ class LocalP2PCluster:
                     / total,
                     *[grads_peers[j] for j in ranks],
                 )
-            peer.params, peer.opt_state = self._apply(
-                peer.params, peer.opt_state, avg, jnp.float32(lr)
-            )
-            jax.block_until_ready(jax.tree.leaves(peer.params))
+            self._apply_avg(peer, avg, lr)
+
+    def _apply_avg(self, peer: PeerState, avg, lr: float):
+        """Step the peer's optimizer with an already-mixed gradient."""
+        peer.params, peer.opt_state = self._apply(
+            peer.params, peer.opt_state, avg, jnp.float32(lr)
+        )
+        jax.block_until_ready(jax.tree.leaves(peer.params))
         peer.steps_done += 1
+
+    def _sharded_exchange_sync(self, grads: Dict[int, Any], epoch: int):
+        """Shard-addressed exchange (reduce_scatter host image, SPIRT-style).
+
+        Three phases over the mailbox, shards — not pytrees — on the wire:
+
+        1. **scatter** — each peer splits its gradient into P contiguous
+           shards (:class:`~repro.core.shard.ShardPlan`) and publishes one
+           *piece* message per foreign shard owner (``shard=("piece", j)``).
+        2. **aggregate** — owner ``j`` consumes only the pieces of ITS
+           shard, reduces ``model/P`` elements per contribution (the
+           O(model) -> O(model/P) cut), and re-broadcasts the aggregated
+           shard (``shard=("agg",)``). When a serverless executor is
+           attached, the P concurrent aggregator invocations are priced on
+           the runtime engine with memory sized from shard bytes.
+        3. **gather** — every peer consumes the P-1 foreign aggregated
+           shards, reassembles the buffer in shard-index order, unflattens
+           to the global mean, and steps its optimizer.
+        """
+        plan, P = self.shard_plan, self.num_peers
+        # -- phase 1: scatter shard pieces ---------------------------------
+        rows: Dict[int, Any] = {}
+        for peer in self.peers:
+            r = peer.rank
+            with peer.metrics.stage("send_gradients"):
+                shard_rows = plan.shards(grads[r])  # (P, S)
+                jax.block_until_ready(shard_rows)
+                rows[r] = shard_rows
+                for j in range(P):
+                    if j == r:
+                        continue  # own piece never leaves the peer
+                    payload, nbytes = self.protocol.host_encode_shard(
+                        shard_rows[j], self.xctx
+                    )
+                    wire_s = self.link.transfer_s(nbytes)
+                    self.mailbox.publish(
+                        r, payload, nbytes=nbytes, time=wire_s, epoch=epoch,
+                        shard=("piece", j),
+                    )
+                    peer.comm_bytes_sent += nbytes
+                    peer.send_time_s += wire_s
+        # -- phase 2: owners aggregate their shard, re-broadcast -----------
+        agg_rows: Dict[int, Any] = {}
+        per_shard_s: List[float] = []
+        for peer in self.peers:
+            r = peer.rank
+            with peer.metrics.stage("receive_gradients"):
+                pieces = [rows[r][r].astype(jnp.float32)]
+                for other in range(P):
+                    if other == r:
+                        continue
+                    msg = self.mailbox.consume(
+                        other, consumer=r, shard=("piece", r)
+                    )
+                    peer.recv_time_s += self.mailbox.download_time_s(
+                        msg, link=self.link
+                    )
+                    pieces.append(
+                        self.protocol.host_decode_shard(msg.payload, self.xctx)
+                    )
+            t0 = time.perf_counter()
+            agg = sum(pieces[1:], pieces[0]) / P
+            jax.block_until_ready(agg)
+            per_shard_s.append(time.perf_counter() - t0)
+            agg_rows[r] = agg
+            with peer.metrics.stage("send_gradients"):
+                payload, nbytes = self.protocol.host_encode_shard(agg, self.xctx)
+                wire_s = self.link.transfer_s(nbytes)
+                self.mailbox.publish(
+                    r, payload, nbytes=nbytes, time=wire_s, epoch=epoch,
+                    shard=("agg",),
+                )
+                peer.comm_bytes_sent += nbytes
+                peer.send_time_s += wire_s
+        if self.executor is not None and self.executor.backend == "serverless":
+            self.aggregation_reports.append(
+                self.executor.simulate_aggregation(
+                    per_shard_s,
+                    shard_bytes=plan.shard_bytes(self.xctx.wire_dtype),
+                    num_contributions=P,
+                    epoch=epoch,
+                    link=self.link,
+                )
+            )
+        # -- phase 3: reassemble the mean, step ----------------------------
+        for peer in self.peers:
+            r = peer.rank
+            with peer.metrics.stage("receive_gradients"):
+                bank = []
+                for j in range(P):
+                    if j == r:
+                        bank.append(agg_rows[r])
+                        continue
+                    msg = self.mailbox.consume(j, consumer=r, shard=("agg",))
+                    peer.recv_time_s += self.mailbox.download_time_s(
+                        msg, link=self.link
+                    )
+                    bank.append(
+                        self.protocol.host_decode_shard(msg.payload, self.xctx)
+                    )
+            avg = plan.unflatten(jnp.stack(bank))
+            with peer.metrics.stage("model_update"):
+                self._apply_avg(peer, avg, self.detector.lr)
 
     def comm_cost(self, *, usd_per_gb: float = 0.0) -> CommCost:
         """Per-step wire cost of one peer under protocol + overlay graph.
@@ -345,6 +476,29 @@ class LocalP2PCluster:
         degree-many downloads counted here.)
         """
         grads_like = jax.eval_shape(lambda p: p, self.peers[0].params)
+        if self.protocol.sharded:
+            # Shard-addressed: per-edge payload is one shard. The per-step
+            # total is the protocol's own accounting — 2(P-1) x shard,
+            # which on the host path is exactly the peer's DOWNLOAD count
+            # (P-1 pieces in the aggregate phase + P-1 foreign aggregated
+            # shards in the gather phase), the same receive-side
+            # convention as the dense branch below; publish uploads
+            # (host_wire_bytes = P x shard) are charged separately per
+            # publish, as for dense protocols.
+            return CommCost(
+                wire_bytes_per_step=self.protocol.wire_bytes(
+                    grads_like, self.xctx
+                ),
+                bandwidth_bps=self.bw,
+                usd_per_gb_egress=usd_per_gb,
+                bytes_per_edge=self.protocol.wire_bytes_per_edge(
+                    grads_like, self.xctx
+                ),
+                degree=self.xctx.degree,
+                graph_name=self.graph.name,
+                num_shards=self.shard_plan.num_shards,
+                shard_bytes=self.shard_plan.shard_bytes(self.xctx.wire_dtype),
+            )
         per_edge = self.protocol.host_wire_bytes(grads_like, self.xctx)
         return CommCost(
             wire_bytes_per_step=int(round(per_edge * self.xctx.degree)),
@@ -372,18 +526,23 @@ class LocalP2PCluster:
     def run_epoch_sync(self, epoch: int) -> Dict[str, float]:
         """One synchronous epoch: compute -> publish -> barrier -> consume -> update."""
         grads, stats = {}, []
+        sharded = self.protocol.sharded
         for peer in self.peers:
             with peer.metrics.stage("compute_gradients"):
                 g, loss, acc, wall = self._compute_peer_gradient(peer, epoch)
             grads[peer.rank] = g
             stats.append((loss, acc))
-            self._publish(peer, g, epoch, at_time=0.0)
+            if not sharded:
+                self._publish(peer, g, epoch, at_time=0.0)
             self.mailbox.barrier_signal(peer.rank, epoch)
         assert self.mailbox.barrier_complete(epoch)  # SynchronisationBarrier
         self.mailbox.barrier_reset(epoch)
-        for peer in self.peers:
-            gp, _ = self._consume_all(peer, grads[peer.rank], at_time=None)
-            self._update(peer, gp, self.detector.lr)
+        if sharded:
+            self._sharded_exchange_sync(grads, epoch)
+        else:
+            for peer in self.peers:
+                gp, _ = self._consume_all(peer, grads[peer.rank], at_time=None)
+                self._update(peer, gp, self.detector.lr)
         loss = float(np.mean([s[0] for s in stats]))
         acc = float(np.mean([s[1] for s in stats]))
         return {"loss": loss, "acc": acc}

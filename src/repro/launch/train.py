@@ -132,6 +132,9 @@ def main(argv=None):
         cc = trainer.comm_cost(state.params)
         print(f"graph: {trainer.graph.describe()}")
         print(f"exchange={topo.exchange_name}: {cc.summary()}")
+        plan = trainer.shard_plan(state.params)
+        if plan is not None:
+            print(f"shard plan: {plan.describe()}")
 
     ds = make_dataset("lm", size=200_000, vocab_size=cfg.vocab_size, seq_len=args.seq)
     loader = DataLoader(Partitioner(ds, 1), 0, args.batch)
@@ -174,6 +177,14 @@ def main(argv=None):
             f"cold_starts={rep.num_cold_starts} retries={rep.num_retries} "
             f"queue_wait={rep.queue_wait_s:.2f}s cost=${rep.cost_usd:.6f}"
         )
+        if trainer.protocol.sharded:
+            agg = trainer.account_aggregation(epoch=0)
+            print(
+                f"sharded aggregation: {agg.num_batches} parallel aggregators "
+                f"x {agg.lambda_memory_mb}MB (sized from shard bytes), "
+                f"wall {agg.wall_time_s:.3f}s cold_starts={agg.num_cold_starts} "
+                f"cost=${agg.cost_usd:.6f}"
+            )
     if args.checkpoint:
         trainer.save(args.checkpoint, state)
         print(f"saved checkpoint to {args.checkpoint}")

@@ -32,6 +32,7 @@ from repro.core.p2p import (
     exchange_context,
 )
 from repro.core.serverless import ExecutionReport, ServerlessExecutor
+from repro.core.shard import ShardPlan
 from repro.optim import Optimizer
 from repro.train import checkpoint as ckpt
 from repro.train.steps import init_train_state, lm_loss
@@ -88,6 +89,21 @@ class P2PTrainer:
         """The resolved :class:`~repro.core.graph.PeerGraph` overlay."""
         return self.ctx.graph
 
+    def shard_plan(self, params_like=None) -> Optional[ShardPlan]:
+        """The sharded-exchange layout (one shard per peer), or ``None``
+        when the active protocol exchanges whole pytrees."""
+        if not self.protocol.sharded:
+            return None
+        if params_like is None:
+            params_like = self._params_like()
+        return self.protocol.plan(params_like, self.ctx)
+
+    def _params_like(self):
+        return jax.eval_shape(
+            lambda: init_train_state(jax.random.PRNGKey(0), self.cfg,
+                                     self.optimizer)
+        ).params
+
     # -- state ---------------------------------------------------------------
     def init_state(self, key: jax.Array) -> TrainState:
         state = init_train_state(key, self.cfg, self.optimizer)
@@ -106,10 +122,7 @@ class P2PTrainer:
     def wire_bytes_per_step(self, params_like=None) -> int:
         """Bytes one peer publishes per step under the active protocol."""
         if params_like is None:
-            params_like = jax.eval_shape(
-                lambda: init_train_state(jax.random.PRNGKey(0), self.cfg,
-                                         self.optimizer)
-            ).params
+            params_like = self._params_like()
         return self.protocol.wire_bytes(params_like, self.ctx)
 
     def comm_cost(
@@ -119,10 +132,8 @@ class P2PTrainer:
         """Per-step exchange cost, straight from the protocol's byte counts
         (degree-aware: per-edge payload x the overlay graph's degree)."""
         if params_like is None:
-            params_like = jax.eval_shape(
-                lambda: init_train_state(jax.random.PRNGKey(0), self.cfg,
-                                         self.optimizer)
-            ).params
+            params_like = self._params_like()
+        plan = self.shard_plan(params_like)
         return CommCost(
             wire_bytes_per_step=self.protocol.wire_bytes(params_like, self.ctx),
             bandwidth_bps=bandwidth_bps,
@@ -133,6 +144,10 @@ class P2PTrainer:
             ),
             degree=self.ctx.degree,
             graph_name=self.ctx.graph.name if self.ctx.graph is not None else "full",
+            num_shards=plan.num_shards if plan is not None else 1,
+            shard_bytes=(
+                plan.shard_bytes(self.ctx.wire_dtype) if plan is not None else 0
+            ),
         )
 
     @property
@@ -184,6 +199,46 @@ class P2PTrainer:
             epoch=epoch,
             peer=peer,
             egress_bytes=egress_bytes,
+            usd_per_gb_egress=usd_per_gb_egress,
+        )
+
+    def account_aggregation(
+        self,
+        per_shard_s: Optional[Sequence[float]] = None,
+        *,
+        reduce_bytes_per_s: float = 4e9,
+        epoch: Optional[int] = None,
+        peer: Any = 0,
+        link=None,
+        usd_per_gb_egress: float = 0.0,
+    ) -> ExecutionReport:
+        """Price the sharded aggregation stage as P parallel Lambdas.
+
+        Only meaningful for a sharded protocol (``reduce_scatter``). With
+        no measured ``per_shard_s``, each aggregator's reduce time is
+        estimated from shard bytes x contributions at
+        ``reduce_bytes_per_s`` — good enough for sizing/scaling studies;
+        pass measured times for real accounting. Memory is sized from
+        shard bytes (see ``ServerlessExecutor.simulate_aggregation``).
+        """
+        plan = self.shard_plan()
+        if plan is None:
+            raise ValueError(
+                f"exchange protocol {self.protocol.name!r} is not sharded; "
+                "aggregation accounting applies to reduce_scatter-style "
+                "protocols only"
+            )
+        P = self.num_peers
+        if per_shard_s is None:
+            t = plan.shard_bytes(self.ctx.wire_dtype) * P / reduce_bytes_per_s
+            per_shard_s = [t] * plan.num_shards
+        return self.serverless.simulate_aggregation(
+            per_shard_s,
+            shard_bytes=plan.shard_bytes(self.ctx.wire_dtype),
+            num_contributions=P,
+            epoch=epoch,
+            peer=peer,
+            link=link,
             usd_per_gb_egress=usd_per_gb_egress,
         )
 

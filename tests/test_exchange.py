@@ -26,7 +26,10 @@ SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
 
 def test_registry_enumerates_all_protocols():
     names = available_exchanges()
-    assert {"allgather_mean", "psum_mean", "qsgd", "topk", "async"} <= set(names)
+    assert {
+        "allgather_mean", "psum_mean", "qsgd", "topk", "async",
+        "reduce_scatter",
+    } <= set(names)
     for n in names:
         proto = get_exchange(n)
         assert isinstance(proto, ExchangeProtocol)
@@ -214,6 +217,7 @@ def test_sync_protocols_match_reference_mean_multidevice():
         for name, kw, tol in [
             ("allgather_mean", {}, 1e-6),
             ("psum_mean", {}, 1e-6),
+            ("reduce_scatter", {}, 1e-6),  # sharded ring, same mean
             ("topk", {"topk_frac": 1.0}, 1e-6),  # k=n: lossless
             ("qsgd", {"qsgd": QSGDConfig(levels=127, bucket=64)}, 0.5),
         ]:
