@@ -26,6 +26,7 @@ def main() -> None:
         fig7_faults_coldstart,
         fig8_topology_scaling,
         fig9_sharded_aggregation,
+        fig10_cost_time_frontier,
         roofline,
         table1_resource_stages,
         table2_3_cost,
@@ -42,6 +43,7 @@ def main() -> None:
         "fig7": fig7_faults_coldstart,
         "fig8": fig8_topology_scaling,
         "fig9": fig9_sharded_aggregation,
+        "fig10": fig10_cost_time_frontier,
         "roofline": roofline,
     }
     if args.only:

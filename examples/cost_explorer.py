@@ -2,7 +2,9 @@
 
 Sweeps the paper's trade-off space — batch size, number of Lambda
 invocations, memory sizing — and prints the serverless-vs-instance cost and
-time Pareto, including the paper's own Table II/III points and the TPU
+time Pareto, using the unified CostReport frontier API throughout: the
+paper's own Table II/III points, the engine-priced instance baseline
+(boot, idle billing, memory-constrained splitting), and the TPU
 chip-second equivalent of the same trade-off.
 
     PYTHONPATH=src python examples/cost_explorer.py
@@ -12,30 +14,42 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core.cost import (
     CommCost,
+    CostReport,
     InstanceCost,
     ServerlessCost,
     TPUCost,
+    compare_backends,
+    pareto_frontier,
     paper_table2_row,
     paper_table3_row,
 )
-from repro.core.events import RuntimeConfig, available_allocations
+from repro.core.events import InstanceConfig, RuntimeConfig, available_allocations
 from repro.core.exchange import ExchangeContext, available_exchanges, get_exchange
 from repro.core.serverless import ServerlessExecutor, ServerlessPlanner
 
 
 def main():
-    print("=== Paper Tables II/III (VGG11 / MNIST / 4 peers) ===")
-    print(f"{'batch':>6} {'serverless $':>13} {'instance $':>11} {'ratio':>6} "
+    print("=== Paper Tables II/III (VGG11 / MNIST / 4 peers), via CostReport ===")
+    print(f"{'batch':>6} {'serverless $':>13} {'instance $':>11} {'multiple':>8} "
           f"{'t_serverless':>12} {'t_instance':>11} {'speedup':>8}")
     for b in (1024, 512, 128, 64):
         r2, r3 = paper_table2_row(b), paper_table3_row(b)
-        s = ServerlessCost(r2["compute_time_s"], r2["num_batches"],
-                           r2["lambda_memory_mb"], "t2.small")
-        i = InstanceCost(r3["compute_time_s"], "t2.large")
-        print(f"{b:>6} {s.cost_per_peer:>13.5f} {i.cost_per_peer:>11.5f} "
-              f"{s.cost_per_peer/i.cost_per_peer:>6.2f} "
-              f"{r2['compute_time_s']:>11.1f}s {r3['compute_time_s']:>10.1f}s "
-              f"{r3['compute_time_s']/r2['compute_time_s']:>7.1f}x")
+        s = CostReport(
+            "serverless", r2["compute_time_s"],
+            ServerlessCost(r2["compute_time_s"], r2["num_batches"],
+                           r2["lambda_memory_mb"], "t2.small").cost_per_peer,
+            label=f"batch{b}",
+        )
+        i = CostReport(
+            "instance", r3["compute_time_s"],
+            InstanceCost(r3["compute_time_s"], "t2.large").cost_per_peer,
+            instance="t2.large", label=f"batch{b}",
+        )
+        cmp = compare_backends(s, i)
+        print(f"{b:>6} {s.cost_usd:>13.5f} {i.cost_usd:>11.5f} "
+              f"{cmp['cost_multiple']:>7.2f}x "
+              f"{s.wall_time_s:>11.1f}s {i.wall_time_s:>10.1f}s "
+              f"{cmp['speedup_pct']:>7.1f}%")
 
     print("\n=== Planner: Lambda sizing vs model size (batch 4 MB) ===")
     planner = ServerlessPlanner()
@@ -76,6 +90,34 @@ def main():
               f"wall={rep.wall_time_s:6.2f}s cold={rep.num_cold_starts} "
               f"retries={rep.num_retries} ${rep.cost_usd:.6f}/peer/epoch")
     print(f"(allocation policies registered: {', '.join(available_allocations())})")
+
+    print("\n=== Engine-priced instance baseline + the cost-time frontier ===")
+    # the same 30 batches, sequentially, across EC2 tiers (boot 40 s billed;
+    # a VGG11-scale model + large batch splits on the small tier)
+    model_bytes, batch_bytes = int(531e6), int(160e6)
+    sex = ServerlessExecutor(instance="t2.small", instance_vcpus=1.0)
+    srep = sex.simulate(per_batch, model_bytes=model_bytes,
+                        batch_bytes=batch_bytes)
+    points = [srep.cost_report(label="serverless")]
+    for tier in ("t2.small", "t2.medium", "t2.large"):
+        iex = ServerlessExecutor(
+            backend="instance", instance=tier,
+            instance_config=InstanceConfig(boot_s=40.0),
+        )
+        irep = iex.simulate_instance(
+            per_batch, model_bytes=model_bytes, batch_bytes=batch_bytes,
+            reference_vcpus=1.0,
+        )
+        points.append(irep.cost_report(label=tier))
+        cmp = compare_backends(points[0], points[-1])
+        print(f"{tier:10s} wall={irep.wall_time_s:7.2f}s "
+              f"(boot={irep.boot_s:.0f}s splits={irep.num_splits}) "
+              f"${irep.cost_usd:.6f}  ->  serverless "
+              f"{cmp['speedup_pct']:.2f}% faster at "
+              f"{cmp['cost_multiple']:.2f}x the cost")
+    print("frontier (non-dominated wall/cost points):")
+    for p in pareto_frontier(points):
+        print(f"  {p.label:12s} {p.summary()}")
 
     print("\n=== TPU equivalent: cost/step of the serverless-P2P train step ===")
     # Using the roofline collective-bound estimate for qwen2.5-3b train_4k:

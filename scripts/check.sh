@@ -32,6 +32,10 @@ for n in available_graphs():
   python -m benchmarks.run --only fig8
   echo "== smoke: sharded aggregation (Fig. 9) =="
   python -m benchmarks.run --only fig9
+  echo "== smoke: cost-time frontier, serverless vs instance (Fig. 10) =="
+  python -m benchmarks.run --only fig10
+  echo "== smoke: docs link check =="
+  python scripts/check_links.py
 }
 
 if [[ "${1:-}" == "--fast" ]]; then

@@ -16,7 +16,7 @@ TPU backend (for the roofline work): chip-seconds at an on-demand v5e rate.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
+from typing import Dict, List, Sequence
 
 LAMBDA_USD_PER_GB_S_ARM = 0.0000133334
 LAMBDA_USD_PER_REQUEST = 0.20 / 1_000_000
@@ -30,7 +30,41 @@ EC2_USD_PER_HOUR = {
     "t2.xlarge": 0.1856,
 }
 
+# t2 tier shapes (AWS docs): what the instance-baseline simulation sizes
+# against — memory bounds the resident model + batch working set (the
+# paper's "resource-constrained scenario" forces mini-batch splitting when
+# it doesn't fit), vCPUs scale sequential gradient compute.
+EC2_MEMORY_MB = {
+    "t2.nano": 512,
+    "t2.micro": 1024,
+    "t2.small": 2048,
+    "t2.medium": 4096,
+    "t2.large": 8192,
+    "t2.xlarge": 16384,
+}
+
+EC2_VCPUS = {
+    "t2.nano": 1,
+    "t2.micro": 1,
+    "t2.small": 1,
+    "t2.medium": 2,
+    "t2.large": 2,
+    "t2.xlarge": 4,
+}
+
 TPU_V5E_USD_PER_CHIP_HOUR = 1.20
+
+
+def working_set_mb(
+    model_bytes: int, batch_bytes: int, overhead_mb: float = 0.0
+) -> float:
+    """Resident working set of one training step, in MB: params + grads
+    (2x model) + activations (~3x one batch) + runtime overhead. The ONE
+    sizing model shared by ``ServerlessPlanner.lambda_memory_mb`` (Lambda
+    tier fit) and ``repro.core.instance.instance_splits`` (EC2
+    mini-batch splitting), so the two backends' memory stories cannot
+    drift apart."""
+    return (2 * model_bytes + 3 * batch_bytes) / 1e6 + overhead_mb
 
 
 def ec2_cost_per_second(instance: str) -> float:
@@ -91,13 +125,36 @@ class ServerlessCost:
 
 @dataclass(frozen=True)
 class InstanceCost:
-    compute_time_s: float
+    """Paper formula (2) plus full per-second EC2 billing.
+
+    The analytic form — ``ec2_cost_s * T`` with every engine field at its
+    zero default — is exactly the paper's Formula (2). The engine-priced
+    variant (:class:`repro.core.instance.InstanceRuntime`) additionally
+    bills what a real VM fleet bills: boot/provisioning time (the meter
+    runs while the stack starts) and idle time (e.g. waiting at the sync
+    barrier for slower peers), while churn ``unbilled_downtime_s`` — the
+    gap between a VM dying and its replacement starting to boot — extends
+    the wall-clock without extending the bill.
+    """
+
+    compute_time_s: float  # busy seconds: batches + churn redos + wire time
     instance: str = "t2.large"
+    boot_s: float = 0.0  # provisioning/boot seconds (billed)
+    idle_s: float = 0.0  # billed-but-idle seconds (barrier wait)
+    unbilled_downtime_s: float = 0.0  # churn gaps with no VM running
+
+    @property
+    def billed_s(self) -> float:
+        return self.compute_time_s + self.boot_s + self.idle_s
+
+    @property
+    def wall_time_s(self) -> float:
+        return self.billed_s + self.unbilled_downtime_s
 
     @property
     def cost_per_peer(self) -> float:
-        """Paper formula (2)."""
-        return ec2_cost_per_second(self.instance) * self.compute_time_s
+        """Paper formula (2); boot/idle extend T, downtime never does."""
+        return ec2_cost_per_second(self.instance) * self.billed_s
 
 
 @dataclass(frozen=True)
@@ -168,6 +225,86 @@ class TPUCost:
     @property
     def cost_per_step(self) -> float:
         return self.step_time_s * self.chips * self.usd_per_chip_hour / 3600.0
+
+
+# ---------------------------------------------------------------------------
+# CostReport — the unified cost–time frontier API
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CostReport:
+    """One backend's (wall-clock, dollars) point for one peer-epoch.
+
+    The common currency between :class:`ServerlessCost` and the
+    engine-priced :class:`InstanceCost`: both execution paths reduce their
+    accounting to a ``CostReport`` (``ExecutionReport.cost_report()``), so
+    the paper's headline comparison — serverless up to 97.34% faster at up
+    to 5.4x the cost — is a pair of these and two method calls.
+    """
+
+    backend: str  # "serverless" | "instance"
+    wall_time_s: float
+    cost_usd: float  # per peer per epoch
+    instance: str = ""  # EC2 tier (baseline VM or serverless orchestrator)
+    lambda_memory_mb: int = 0  # serverless only
+    num_peers: int = 1
+    label: str = ""  # free-form scenario tag for frontier plots
+
+    @property
+    def total_usd(self) -> float:
+        """Whole-cluster epoch cost (every peer pays its own bill)."""
+        return self.cost_usd * self.num_peers
+
+    def speedup_pct_vs(self, baseline: "CostReport") -> float:
+        """Wall-clock improvement over ``baseline``, in percent (the
+        paper's 97.34% figure is ``serverless.speedup_pct_vs(instance)``)."""
+        if baseline.wall_time_s <= 0.0:
+            return 0.0
+        return 100.0 * (1.0 - self.wall_time_s / baseline.wall_time_s)
+
+    def cost_multiple_vs(self, baseline: "CostReport") -> float:
+        """Dollar multiple over ``baseline`` (the paper's 5.4x figure)."""
+        if baseline.cost_usd <= 0.0:
+            return float("inf") if self.cost_usd > 0 else 1.0
+        return self.cost_usd / baseline.cost_usd
+
+    def summary(self) -> str:
+        s = f"{self.backend}: wall {self.wall_time_s:.2f}s ${self.cost_usd:.6f}/peer/epoch"
+        if self.lambda_memory_mb:
+            s += f" ({self.lambda_memory_mb}MB Lambda)"
+        if self.instance:
+            s += f" [{self.instance}]"
+        return s
+
+
+def compare_backends(serverless: CostReport, instance: CostReport) -> Dict[str, float]:
+    """The paper's headline comparison as one dict: speedup % and cost
+    multiple of the serverless point over the instance baseline, plus the
+    raw coordinates of both points (handy for JSON benchmark records)."""
+    return {
+        "speedup_pct": serverless.speedup_pct_vs(instance),
+        "cost_multiple": serverless.cost_multiple_vs(instance),
+        "serverless_wall_s": serverless.wall_time_s,
+        "instance_wall_s": instance.wall_time_s,
+        "serverless_usd": serverless.cost_usd,
+        "instance_usd": instance.cost_usd,
+    }
+
+
+def pareto_frontier(points: Sequence[CostReport]) -> List[CostReport]:
+    """The non-dominated subset of (wall_time_s, cost_usd) points, sorted
+    by wall-clock ascending — the cost–time frontier a deployment actually
+    chooses from. A point survives iff no other point is at least as fast
+    AND at least as cheap (strictly better in one coordinate)."""
+    pts = sorted(points, key=lambda p: (p.wall_time_s, p.cost_usd))
+    frontier: List[CostReport] = []
+    best_cost = float("inf")
+    for p in pts:
+        if p.cost_usd < best_cost:
+            frontier.append(p)
+            best_cost = p.cost_usd
+    return frontier
 
 
 def paper_table2_row(batch_size: int) -> Dict[str, float]:

@@ -155,6 +155,67 @@ class RuntimeConfig:
         )
 
 
+@dataclass(frozen=True)
+class InstanceConfig:
+    """Provisioning/boot/churn model of the simulated EC2 fleet — the
+    conventional instance-based P2P baseline's counterpart to
+    :class:`RuntimeConfig`.
+
+    The zero-argument default is the *ideal* fleet — instant boot, no
+    churn — under which :class:`repro.core.instance.InstanceRuntime`
+    reproduces the legacy closed-form Formula-(2) accounting exactly (see
+    the equivalence tests). Every effect is opt-in, mirroring the
+    serverless config.
+    """
+
+    boot_s: float = 0.0  # VM provision + boot delay before the first batch
+    churn_prob: float = 0.0  # P(the VM dies while computing one batch)
+    churn_downtime_s: float = 0.0  # detection + replacement gap (not billed)
+    max_churn_redos: int = 5  # then the VM is forcibly kept up (epochs end)
+    seed: int = 0
+
+    @staticmethod
+    def ideal() -> "InstanceConfig":
+        return InstanceConfig()
+
+    @staticmethod
+    def aws_default() -> "InstanceConfig":
+        """Realistic EC2 figures: tens-of-seconds boot (image pull + stack
+        start), rare spot-style interruptions with a detection delay."""
+        return InstanceConfig(
+            boot_s=40.0,
+            churn_prob=0.002,
+            churn_downtime_s=30.0,
+        )
+
+
+@dataclass
+class InstanceEpochResult:
+    """Stage-level timing of one simulated instance-backend peer epoch.
+
+    ``billed_s`` partitions cleanly: boot + compute + redo + wire + idle
+    are billed (per-second EC2 billing runs whenever a VM exists, idle or
+    not); ``downtime_s`` — the gap between a churn death and the
+    replacement VM starting to boot — is the one unbilled component.
+    ``makespan_s`` is the full wall-clock including that downtime.
+    """
+
+    makespan_s: float = 0.0  # epoch submit -> last event, incl. downtime
+    boot_s: float = 0.0  # provisioning time paid (first boot + churn reboots)
+    compute_s: float = 0.0  # productive batch execution (incl. split overhead)
+    redo_s: float = 0.0  # partial batch work lost to churn, re-executed
+    downtime_s: float = 0.0  # churn gaps with no VM running (NOT billed)
+    wire_s: float = 0.0  # exchange upload + degree-many downloads on the link
+    idle_s: float = 0.0  # billed-but-idle (e.g. sync-barrier wait)
+    churn_drops: int = 0
+    splits: int = 1  # micro-batches per batch under memory pressure
+
+    @property
+    def billed_s(self) -> float:
+        """EC2-billed seconds: everything a running VM existed for."""
+        return self.boot_s + self.compute_s + self.redo_s + self.wire_s + self.idle_s
+
+
 # ---------------------------------------------------------------------------
 # Per-invocation records
 # ---------------------------------------------------------------------------

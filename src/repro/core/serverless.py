@@ -37,19 +37,24 @@ import jax
 import numpy as np
 
 from repro.core.cost import (
-    InstanceCost,
+    CostReport,
     ServerlessCost,
     ec2_cost_per_second,
     lambda_cost_per_second,
+    working_set_mb,
 )
 from repro.core.events import (
     AllocationPolicy,
     FanoutResult,
+    InstanceConfig,
+    InstanceEpochResult,
     InvocationRecord,
+    LinkModel,
     RuntimeConfig,
     ServerlessRuntime,
     get_allocation,
 )
+from repro.core.instance import InstanceRuntime, instance_speedup, instance_splits
 
 LAMBDA_MAX_MEMORY_MB = 10_240  # AWS cap (paper §III-A)
 LAMBDA_TIMEOUT_S = 15 * 60
@@ -115,8 +120,8 @@ class ServerlessPlanner:
         self.runtime_overhead_mb = runtime_overhead_mb
 
     def lambda_memory_mb(self, model_bytes: int, batch_bytes: int) -> int:
-        # params + grads + activations(~2x batch) + runtime
-        need = (2 * model_bytes + 3 * batch_bytes) / 1e6 + self.runtime_overhead_mb
+        # params + grads + activations + runtime (shared sizing model)
+        need = working_set_mb(model_bytes, batch_bytes, self.runtime_overhead_mb)
         mb = int(math.ceil(need / 64.0) * 64)
         if mb > LAMBDA_MAX_MEMORY_MB:
             raise ValueError(
@@ -164,6 +169,29 @@ class ExecutionReport:
     egress_usd: float = 0.0
     download_s: float = 0.0  # payload fetch time (sharded aggregator pieces)
     invocations: List[InvocationRecord] = field(default_factory=list)
+    # -- instance-runtime accounting (instance backend) ---------------------
+    instance: str = ""  # EC2 tier (baseline VM / serverless orchestrator)
+    boot_s: float = 0.0  # VM provisioning time paid this epoch (billed)
+    idle_s: float = 0.0  # billed-but-idle seconds (barrier wait)
+    downtime_s: float = 0.0  # unbilled churn gaps (no VM running)
+    churn_drops: int = 0
+    num_splits: int = 1  # micro-batches per batch under memory pressure
+    wire_s: float = 0.0  # exchange upload + degree-many downloads
+    instance_billed_s: float = 0.0  # EC2-billed seconds (boot+busy+idle)
+
+    def cost_report(self, *, num_peers: int = 1, label: str = "") -> CostReport:
+        """This epoch's point on the cost–time frontier — the common
+        currency that makes serverless and instance accounting directly
+        comparable (``repro.core.cost.compare_backends``)."""
+        return CostReport(
+            backend=self.backend,
+            wall_time_s=self.wall_time_s,
+            cost_usd=self.cost_usd,
+            instance=self.instance,
+            lambda_memory_mb=self.lambda_memory_mb,
+            num_peers=num_peers,
+            label=label,
+        )
 
 
 class ServerlessExecutor:
@@ -187,6 +215,7 @@ class ServerlessExecutor:
         orchestration_overhead_s: float = 0.30,  # Step Functions state machine
         runtime: Union[RuntimeConfig, ServerlessRuntime, None] = None,
         allocation: Union[str, AllocationPolicy] = "static",
+        instance_config: Union[InstanceConfig, InstanceRuntime, None] = None,
     ):
         assert backend in ("serverless", "instance")
         self.backend = backend
@@ -199,11 +228,22 @@ class ServerlessExecutor:
             self.runtime = runtime
         else:
             self.runtime = ServerlessRuntime(runtime)
+        # The instance-baseline counterpart of `runtime`: a discrete-event
+        # VM fleet (boot, per-second billing, churn). The ideal default
+        # reproduces the legacy Formula-(2) closed form exactly.
+        if isinstance(instance_config, InstanceRuntime):
+            self.instance_runtime = instance_config
+        else:
+            self.instance_runtime = InstanceRuntime(
+                instance_config, instance=instance
+            )
         if isinstance(allocation, str):
             allocation = get_allocation(allocation)
         self.allocation: AllocationPolicy = allocation
         # per-peer fan-out history, the allocation policy's observation stream
         self.history: Dict[Any, List[FanoutResult]] = {}
+        # per-peer instance-epoch history (the VM fleet's observation stream)
+        self.instance_history: Dict[Any, List[InstanceEpochResult]] = {}
 
     # ------------------------------------------------------------------
     def _memory_mb(self, planned_mb: int, epoch: int, peer: Any) -> int:
@@ -293,6 +333,7 @@ class ServerlessExecutor:
             egress_bytes=egress_bytes,
             egress_usd=cost.egress_usd,
             invocations=res.invocations,
+            instance=self.instance,
         )
 
     def simulate_aggregation(
@@ -377,6 +418,88 @@ class ServerlessExecutor:
             egress_usd=cost.egress_usd,
             download_s=sum(r.download_s for r in res.invocations),
             invocations=res.invocations,
+            instance=self.instance,
+        )
+
+    def simulate_instance(
+        self,
+        per_batch_s: Sequence[float],
+        *,
+        model_bytes: int = 0,
+        batch_bytes: int = 0,
+        epoch: Optional[int] = None,
+        peer: Any = 0,
+        reference_vcpus: Optional[float] = None,
+        upload_bytes: int = 0,
+        download_bytes: Sequence[int] = (),
+        link: Optional[LinkModel] = None,
+        barrier_wait_s: float = 0.0,
+        strict_fit: bool = True,
+    ) -> ExecutionReport:
+        """Account measured per-batch times under the instance baseline.
+
+        The instance-side mirror of :meth:`simulate`: the same measured
+        batch times, priced on :class:`~repro.core.instance.InstanceRuntime`
+        — sequential execution on the configured EC2 tier, with boot,
+        per-second billing including idle, memory-constrained mini-batch
+        splitting (``model_bytes``/``batch_bytes`` against the tier's
+        memory), seeded churn, and degree-aware wire charging
+        (``upload_bytes`` + one ``download_bytes`` entry per overlay
+        neighbor, through ``link``). ``reference_vcpus`` rescales times
+        measured on a different machine onto this tier's vCPUs (``None`` =
+        already measured here, the legacy convention). The ideal
+        :class:`~repro.core.events.InstanceConfig` with no wire/barrier
+        charging reproduces the legacy closed form: ``wall = sum(
+        per_batch_s)``, ``cost = Formula (2)`` — equivalence-tested.
+        """
+        per_batch = [float(t) for t in per_batch_s]
+        measured = float(sum(per_batch))
+        rt = self.instance_runtime
+        if epoch is None:
+            epoch = len(self.instance_history.get(peer, ()))
+        splits = 1
+        if model_bytes > 0:
+            try:
+                splits = instance_splits(
+                    model_bytes, batch_bytes, rt.instance,
+                    runtime_overhead_mb=self.planner.runtime_overhead_mb,
+                )
+            except ValueError:
+                # the model alone overflows the tier: with strict_fit the
+                # scenario is refused (fig10 marks it "does not fit");
+                # without, fall back to the legacy no-memory-model
+                # accounting (the operator provisioned swap/host memory)
+                if strict_fit:
+                    raise
+                splits = 1
+        speed = instance_speedup(rt.instance, reference_vcpus)
+        res = rt.run_epoch(
+            [t / speed for t in per_batch],
+            peer=peer,
+            splits=splits,
+            upload_bytes=upload_bytes,
+            download_bytes=download_bytes,
+            link=link,
+            barrier_wait_s=barrier_wait_s,
+        )
+        self.instance_history.setdefault(peer, []).append(res)
+        cost = rt.price(res)
+        return ExecutionReport(
+            backend="instance",
+            wall_time_s=res.makespan_s,
+            measured_compute_s=measured,
+            per_batch_s=per_batch,
+            num_batches=len(per_batch),
+            cost_usd=cost.cost_per_peer,
+            epoch=epoch,
+            instance=rt.instance,
+            boot_s=res.boot_s,
+            idle_s=res.idle_s,
+            downtime_s=res.downtime_s,
+            churn_drops=res.churn_drops,
+            num_splits=res.splits,
+            wire_s=res.wire_s,
+            instance_billed_s=cost.billed_s,
         )
 
     def run(
@@ -402,13 +525,18 @@ class ServerlessExecutor:
         g = combine(results)
 
         if self.backend == "instance":
-            report = ExecutionReport(
-                backend="instance",
-                wall_time_s=measured,
-                measured_compute_s=measured,
-                per_batch_s=per_batch,
-                num_batches=len(per_batch),
-                cost_usd=InstanceCost(measured, self.instance).cost_per_peer,
+            # engine-priced baseline: boot, churn, memory-constrained
+            # splitting apply; the ideal default reproduces the legacy
+            # closed form (wall = measured, cost = Formula (2)) exactly.
+            # strict_fit off: an oversized model falls back to the legacy
+            # no-memory-model accounting instead of refusing the epoch
+            report = self.simulate_instance(
+                per_batch,
+                model_bytes=model_bytes,
+                batch_bytes=batch_bytes,
+                epoch=epoch,
+                peer=peer,
+                strict_fit=False,
             )
             return g, report
 

@@ -271,6 +271,11 @@ class LocalP2PCluster:
                 peer.metrics.add_simulated("cold_start", report.cold_start_s)
                 peer.metrics.add_simulated("queue_wait", report.queue_wait_s)
                 peer.metrics.add_simulated("retry", report.retry_s)
+            else:
+                # instance baseline: VM provisioning + churn gaps (the
+                # cluster's own link charges exchange wire separately)
+                peer.metrics.add_simulated("boot", report.boot_s)
+                peer.metrics.add_simulated("churn_downtime", report.downtime_s)
             compute_wall = report.wall_time_s
         else:
             t0 = time.perf_counter()

@@ -21,7 +21,8 @@ from repro import compat, models
 from repro.configs import get_config, reduced
 from repro.core.compression import QSGDConfig
 from repro.core.convergence import ConvergenceDetector
-from repro.core.events import RuntimeConfig, available_allocations
+from repro.core.cost import EC2_MEMORY_MB
+from repro.core.events import InstanceConfig, RuntimeConfig, available_allocations
 from repro.core.exchange import available_exchanges
 from repro.core.p2p import Topology
 from repro.data import BatchKey, DataLoader, Partitioner, make_dataset
@@ -84,6 +85,20 @@ def main(argv=None):
                     help="per-epoch Lambda memory sizing policy")
     ap.add_argument("--serverless-report", action="store_true",
                     help="account measured step times under the runtime at exit")
+    # instance-baseline model (InstanceRuntime event engine)
+    ap.add_argument("--backend", default="serverless",
+                    choices=["serverless", "instance"],
+                    help="which accounting model prices the measured steps")
+    ap.add_argument("--instance-type", default="t2.large",
+                    choices=sorted(EC2_MEMORY_MB),
+                    help="EC2 tier of the instance baseline")
+    ap.add_argument("--boot-s", type=float, default=None,
+                    help="instance: VM provision+boot seconds (billed)")
+    ap.add_argument("--instance-churn-prob", type=float, default=None,
+                    help="instance: P(the VM dies while computing a batch)")
+    ap.add_argument("--cost-report", action="store_true",
+                    help="price the measured steps under BOTH backends at "
+                         "exit and print the cost-time frontier comparison")
     args = ap.parse_args(argv)
 
     import dataclasses as _dc
@@ -101,6 +116,16 @@ def main(argv=None):
         overrides["straggler_prob"] = args.straggler_prob
     if overrides:
         runtime = _dc.replace(runtime, **overrides)
+
+    instance_cfg = (InstanceConfig.aws_default()
+                    if args.runtime_preset == "aws" else InstanceConfig())
+    inst_overrides = {}
+    if args.boot_s is not None:
+        inst_overrides["boot_s"] = args.boot_s
+    if args.instance_churn_prob is not None:
+        inst_overrides["churn_prob"] = args.instance_churn_prob
+    if inst_overrides:
+        instance_cfg = _dc.replace(instance_cfg, **inst_overrides)
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -123,7 +148,9 @@ def main(argv=None):
     opt = adam() if args.optimizer == "adam" else sgd(momentum=0.9)
     sched = warmup_cosine(args.lr, args.steps // 10 + 1, args.steps)
     trainer = P2PTrainer(cfg, opt, topo, mesh, sched,
-                         runtime=runtime, allocation=args.allocation)
+                         runtime=runtime, allocation=args.allocation,
+                         backend=args.backend, instance_type=args.instance_type,
+                         instance_config=instance_cfg)
     state = trainer.init_state(jax.random.PRNGKey(0))
     if args.restore:
         state = trainer.restore(args.restore, state)
@@ -154,7 +181,7 @@ def main(argv=None):
                 )
                 ts = time.time()
                 state, metrics = trainer.step(state, batch)
-                if args.serverless_report:
+                if args.serverless_report or args.cost_report:
                     jax.block_until_ready(state.params)
                     step_times.append(time.time() - ts)
                 if (i + 1) % args.log_every == 0 or i == 0:
@@ -167,23 +194,51 @@ def main(argv=None):
                     if detector.step(loss):
                         print("converged (early stop)")
                         break
-    if args.serverless_report and step_times:
+    if (args.serverless_report or args.cost_report) and step_times:
         # skip step 0 (compilation); one "epoch" = the measured step batch
-        rep = trainer.account_serverless(step_times[1:] or step_times, epoch=0)
-        print(
-            f"serverless accounting [{args.runtime_preset}/{args.allocation}]: "
-            f"{rep.num_batches} invocations x {rep.lambda_memory_mb}MB, "
-            f"wall {rep.wall_time_s:.2f}s (measured {rep.measured_compute_s:.2f}s), "
-            f"cold_starts={rep.num_cold_starts} retries={rep.num_retries} "
-            f"queue_wait={rep.queue_wait_s:.2f}s cost=${rep.cost_usd:.6f}"
-        )
-        if trainer.protocol.sharded:
-            agg = trainer.account_aggregation(epoch=0)
+        times = step_times[1:] or step_times
+        if args.serverless_report and args.backend == "instance":
+            rep = trainer.account_instance(
+                times, epoch=0, charge_exchange=bool(topo.peer_axes)
+            )
             print(
-                f"sharded aggregation: {agg.num_batches} parallel aggregators "
-                f"x {agg.lambda_memory_mb}MB (sized from shard bytes), "
-                f"wall {agg.wall_time_s:.3f}s cold_starts={agg.num_cold_starts} "
-                f"cost=${agg.cost_usd:.6f}"
+                f"instance accounting [{args.instance_type}]: "
+                f"{rep.num_batches} sequential batches x {rep.num_splits} "
+                f"split(s), wall {rep.wall_time_s:.2f}s "
+                f"(measured {rep.measured_compute_s:.2f}s), "
+                f"boot={rep.boot_s:.1f}s wire={rep.wire_s:.2f}s "
+                f"drops={rep.churn_drops} cost=${rep.cost_usd:.6f}"
+            )
+        elif args.serverless_report:
+            rep = trainer.account_serverless(times, epoch=0)
+            print(
+                f"serverless accounting [{args.runtime_preset}/{args.allocation}]: "
+                f"{rep.num_batches} invocations x {rep.lambda_memory_mb}MB, "
+                f"wall {rep.wall_time_s:.2f}s (measured {rep.measured_compute_s:.2f}s), "
+                f"cold_starts={rep.num_cold_starts} retries={rep.num_retries} "
+                f"queue_wait={rep.queue_wait_s:.2f}s cost=${rep.cost_usd:.6f}"
+            )
+            if trainer.protocol.sharded:
+                agg = trainer.account_aggregation(epoch=0)
+                print(
+                    f"sharded aggregation: {agg.num_batches} parallel aggregators "
+                    f"x {agg.lambda_memory_mb}MB (sized from shard bytes), "
+                    f"wall {agg.wall_time_s:.3f}s cold_starts={agg.num_cold_starts} "
+                    f"cost=${agg.cost_usd:.6f}"
+                )
+        if args.cost_report:
+            # gradient-computation scope, fresh accountants on both sides:
+            # reproducible regardless of the report branch above
+            fr = trainer.cost_frontier(times)
+            print(
+                f"gradient-computation cost-time frontier "
+                f"[{args.instance_type} baseline]: "
+                f"serverless {fr['speedup_pct']:.2f}% faster at "
+                f"{fr['cost_multiple']:.2f}x the cost "
+                f"(serverless {fr['serverless_wall_s']:.2f}s/"
+                f"${fr['serverless_usd']:.6f} vs instance "
+                f"{fr['instance_wall_s']:.2f}s/${fr['instance_usd']:.6f} "
+                f"per peer-epoch)"
             )
     if args.checkpoint:
         trainer.save(args.checkpoint, state)

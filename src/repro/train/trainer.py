@@ -21,8 +21,13 @@ from typing import Any, Callable, Optional, Sequence, Union
 import jax
 
 from repro.configs.base import ModelConfig
-from repro.core.cost import CommCost
-from repro.core.events import AllocationPolicy, RuntimeConfig
+from repro.core.cost import CommCost, compare_backends
+from repro.core.events import (
+    AllocationPolicy,
+    InstanceConfig,
+    LinkModel,
+    RuntimeConfig,
+)
 from repro.core.exchange import ExchangeProtocol
 from repro.core.p2p import (
     TrainState,
@@ -56,9 +61,16 @@ class P2PTrainer:
         runtime: Optional[RuntimeConfig] = None,  # serverless fault/cold-start model
         allocation: Union[str, AllocationPolicy] = "static",  # per-epoch memory sizing
         graph: Any = None,  # overlay override: name ("ring", "gossip:3") or PeerGraph
+        backend: str = "serverless",  # which accounting model `account()` prices
+        instance_type: str = "t2.large",  # EC2 tier of the instance baseline
+        instance_config: Optional[InstanceConfig] = None,  # boot/churn model
     ):
         import dataclasses as _dc
 
+        if backend not in ("serverless", "instance"):
+            raise ValueError(
+                f"backend must be 'serverless' or 'instance', got {backend!r}"
+            )
         if graph is not None:
             topo = _dc.replace(topo, graph=graph)
         self.cfg = cfg
@@ -66,9 +78,13 @@ class P2PTrainer:
         self.topo = topo
         self.mesh = mesh
         self.schedule = schedule
+        self.backend = backend
+        self.instance_type = instance_type
+        self.instance_config = instance_config or InstanceConfig()
         self.runtime_config = runtime or RuntimeConfig()
         self.allocation = allocation
         self._serverless: Optional[ServerlessExecutor] = None
+        self._instance_executor: Optional[ServerlessExecutor] = None
         self.protocol: ExchangeProtocol = topo.protocol()
         self.ctx = exchange_context(topo, mesh)
         if loss_fn is None:
@@ -181,6 +197,21 @@ class P2PTrainer:
         and allocation policy. Model bytes come from the config's abstract
         parameter shapes (fp32), no allocation happens.
         """
+        return self.serverless.simulate(
+            per_batch_s,
+            model_bytes=self.model_bytes,
+            batch_bytes=batch_bytes,
+            epoch=epoch,
+            peer=peer,
+            egress_bytes=egress_bytes,
+            usd_per_gb_egress=usd_per_gb_egress,
+        )
+
+    @property
+    def model_bytes(self) -> int:
+        """fp32 parameter bytes from the config's abstract shapes (no
+        allocation happens) — sizes both Lambda memory and the instance
+        baseline's memory-constrained splitting."""
         if not hasattr(self, "_model_bytes"):
             shapes = jax.eval_shape(
                 lambda: init_train_state(
@@ -192,15 +223,117 @@ class P2PTrainer:
             self._model_bytes = sum(
                 int(np.prod(x.shape)) * 4 for x in jax.tree.leaves(shapes)
             )
-        return self.serverless.simulate(
+        return self._model_bytes
+
+    @property
+    def instance_executor(self) -> ServerlessExecutor:
+        """The instance-baseline accountant: same executor type, backend
+        "instance", pricing on the discrete-event ``InstanceRuntime``
+        (boot, per-second billing incl. idle, churn). VM state and epoch
+        history persist across :meth:`account_instance` calls."""
+        if self._instance_executor is None:
+            self._instance_executor = ServerlessExecutor(
+                backend="instance",
+                instance=self.instance_type,
+                instance_config=self.instance_config,
+            )
+        return self._instance_executor
+
+    def account_instance(
+        self,
+        per_batch_s: Sequence[float],
+        *,
+        batch_bytes: int = 0,
+        epoch: Optional[int] = None,
+        peer: Any = 0,
+        charge_exchange: bool = False,  # add degree-aware wire time
+        bandwidth_bps: float = 1e9,
+        barrier_wait_s: float = 0.0,  # billed idle at the sync barrier
+        reference_vcpus: Optional[float] = None,
+        strict_fit: bool = False,  # True: refuse a model that overflows the tier
+    ) -> ExecutionReport:
+        """Price measured per-batch times under the instance baseline.
+
+        The conventional-P2P mirror of :meth:`account_serverless`: the
+        same measured batch times, executed *sequentially* on the
+        trainer's ``instance_type`` VM — boot delay, per-second billing
+        including idle, memory-constrained mini-batch splitting against
+        the tier's memory, and (with ``charge_exchange=True``) one upload
+        plus degree-many downloads through the overlay graph's
+        ``LinkModel``. Together with :meth:`account_serverless` this is
+        the paper's headline comparison (see :meth:`cost_frontier`).
+        """
+        upload_bytes, download_bytes, link = 0, (), None
+        if charge_exchange:
+            cc = self.comm_cost(bandwidth_bps=bandwidth_bps)
+            link = LinkModel(bandwidth_bps=bandwidth_bps)
+            if cc.bytes_per_edge:
+                upload_bytes = cc.bytes_per_edge
+                download_bytes = [cc.bytes_per_edge] * int(round(cc.degree))
+            else:  # fused collective: one aggregate transfer figure
+                download_bytes = [cc.wire_bytes_per_step]
+        return self.instance_executor.simulate_instance(
             per_batch_s,
-            model_bytes=self._model_bytes,
+            model_bytes=self.model_bytes,
             batch_bytes=batch_bytes,
             epoch=epoch,
             peer=peer,
-            egress_bytes=egress_bytes,
-            usd_per_gb_egress=usd_per_gb_egress,
+            reference_vcpus=reference_vcpus,
+            upload_bytes=upload_bytes,
+            download_bytes=download_bytes,
+            link=link,
+            barrier_wait_s=barrier_wait_s,
+            strict_fit=strict_fit,
         )
+
+    def account(self, per_batch_s: Sequence[float], **kw) -> ExecutionReport:
+        """Price per-batch times under the trainer's configured backend
+        (``backend="serverless" | "instance"``); keyword arguments pass
+        through to :meth:`account_serverless` / :meth:`account_instance`."""
+        if self.backend == "instance":
+            return self.account_instance(per_batch_s, **kw)
+        return self.account_serverless(per_batch_s, **kw)
+
+    def cost_frontier(
+        self,
+        per_batch_s: Sequence[float],
+        *,
+        batch_bytes: int = 0,
+        epoch: int = 0,
+        peer: Any = 0,
+    ) -> dict:
+        """Both backends priced on the same measured epoch: returns
+        ``{"serverless": CostReport, "instance": CostReport, "speedup_pct",
+        "cost_multiple", ...}`` — the paper's 97.34% / 5.4x trade-off for
+        THIS workload, one call.
+
+        Scope and determinism: this compares the *gradient-computation*
+        stage — the paper's headline quantity — so exchange wire is
+        charged on NEITHER side (use :meth:`account_instance`
+        (``charge_exchange=True``) and :meth:`comm_cost` for epoch-level
+        accounting). Both sides are priced on FRESH accountants built
+        from the trainer's configs, so the result is a pure function of
+        the measured times — unaffected by warm pools, VM boots, or
+        allocation history left behind by earlier ``account_*`` calls."""
+        s_ex = ServerlessExecutor(
+            runtime=self.runtime_config, allocation=self.allocation,
+        )
+        i_ex = ServerlessExecutor(
+            backend="instance", instance=self.instance_type,
+            instance_config=self.instance_config,
+        )
+        s = s_ex.simulate(
+            per_batch_s, model_bytes=self.model_bytes,
+            batch_bytes=batch_bytes, epoch=epoch, peer=peer,
+        )
+        i = i_ex.simulate_instance(
+            per_batch_s, model_bytes=self.model_bytes,
+            batch_bytes=batch_bytes, epoch=epoch, peer=peer,
+            strict_fit=False,
+        )
+        sr = s.cost_report(num_peers=self.num_peers, label="serverless")
+        ir = i.cost_report(num_peers=self.num_peers, label=self.instance_type)
+        return {"serverless": sr, "instance": ir, **compare_backends(sr, ir)}
 
     def account_aggregation(
         self,

@@ -1,0 +1,328 @@
+"""InstanceRuntime (the instance-based P2P baseline on the event engine):
+analytic Formula-(2) equivalence at the ideal config, boot billing and
+warm VM reuse, memory-constrained mini-batch splitting, seeded churn,
+degree-aware wire charging, and the CostReport frontier API."""
+import numpy as np
+import pytest
+
+from repro.core.cost import (
+    CostReport,
+    EC2_MEMORY_MB,
+    EC2_VCPUS,
+    InstanceCost,
+    compare_backends,
+    ec2_cost_per_second,
+    pareto_frontier,
+)
+from repro.core.events import InstanceConfig, LinkModel
+from repro.core.instance import InstanceRuntime, instance_speedup, instance_splits
+from repro.core.serverless import ServerlessExecutor
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: ideal runtime == analytic Formula (2)  (<= 1e-6)
+# ---------------------------------------------------------------------------
+
+def test_ideal_instance_runtime_reproduces_formula2():
+    """Zero boot, zero churn, unconstrained memory: the engine must
+    reproduce the legacy closed form — wall = sum(per_batch), USD =
+    Formula (2) — to <= 1e-6 (mirror of the PR-2 serverless test)."""
+    ex = ServerlessExecutor(backend="instance", instance="t2.large")
+    per_batch = [0.31, 1.27, 0.064, 0.88, 0.5]
+    rep = ex.simulate_instance(per_batch)
+    legacy_wall = sum(per_batch)
+    legacy_cost = InstanceCost(legacy_wall, "t2.large").cost_per_peer
+    assert abs(rep.wall_time_s - legacy_wall) <= 1e-6
+    assert abs(rep.cost_usd - legacy_cost) <= 1e-6
+    assert rep.backend == "instance" and rep.instance == "t2.large"
+    assert rep.boot_s == 0.0 and rep.churn_drops == 0 and rep.num_splits == 1
+    assert rep.instance_billed_s == pytest.approx(legacy_wall)
+
+
+def test_ideal_equivalence_through_executor_run_path():
+    """The executor's instance backend (used by LocalP2PCluster / fig3)
+    still prices exactly like the legacy closed form at the defaults."""
+    import jax.numpy as jnp
+
+    ex = ServerlessExecutor(backend="instance", instance="t2.small")
+    thunks = [lambda: jnp.zeros(4) for _ in range(3)]
+    g, rep = ex.run(
+        thunks, model_bytes=int(5e6), batch_bytes=int(1e5),
+        combine=lambda outs: outs[0],
+    )
+    assert rep.backend == "instance"
+    assert rep.wall_time_s == pytest.approx(rep.measured_compute_s, abs=1e-6)
+    assert rep.cost_usd == pytest.approx(
+        InstanceCost(rep.wall_time_s, "t2.small").cost_per_peer, abs=1e-9
+    )
+
+
+# ---------------------------------------------------------------------------
+# Boot: billed, paid once per VM lifetime
+# ---------------------------------------------------------------------------
+
+def test_boot_is_billed_and_vm_stays_warm_across_epochs():
+    ex = ServerlessExecutor(
+        backend="instance", instance="t2.small",
+        instance_config=InstanceConfig(boot_s=40.0),
+    )
+    r0 = ex.simulate_instance([1.0] * 4)
+    r1 = ex.simulate_instance([1.0] * 4)
+    assert r0.boot_s == pytest.approx(40.0)
+    assert r0.wall_time_s == pytest.approx(44.0)
+    # per-second billing includes the boot: you pay while the stack starts
+    assert r0.cost_usd == pytest.approx(ec2_cost_per_second("t2.small") * 44.0)
+    # the VM stays up: epoch 1 pays no boot (warm-pool analogue)
+    assert r1.boot_s == 0.0 and r1.wall_time_s == pytest.approx(4.0)
+    assert r0.epoch == 0 and r1.epoch == 1  # history auto-increments
+
+
+def test_boot_is_per_peer():
+    rt = InstanceRuntime(InstanceConfig(boot_s=10.0), instance="t2.small")
+    a = rt.run_epoch([1.0], peer=0)
+    b = rt.run_epoch([1.0], peer=1)  # different VM -> its own boot
+    a2 = rt.run_epoch([1.0], peer=0)
+    assert a.boot_s == 10.0 and b.boot_s == 10.0 and a2.boot_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Memory-constrained mini-batch splitting
+# ---------------------------------------------------------------------------
+
+def test_instance_splits_unconstrained_and_constrained():
+    # 50 MB model + 4 MB batch in 8 GB: comfortable
+    assert instance_splits(int(50e6), int(4e6), "t2.large") == 1
+    # VGG11-scale + large image batch in 2 GB: resource-constrained
+    k = instance_splits(int(531e6), int(160e6), "t2.small")
+    assert k > 1
+    # the chosen k actually fits: 2*model + 3*batch/k + overhead <= tier
+    need_mb = 2 * 531e6 / 1e6 + 3 * 160e6 / 1e6 / k + 700
+    assert need_mb <= EC2_MEMORY_MB["t2.small"]
+    # one fewer split would not fit
+    if k > 1:
+        too_big = 2 * 531e6 / 1e6 + 3 * 160e6 / 1e6 / (k - 1) + 700
+        assert too_big > EC2_MEMORY_MB["t2.small"]
+
+
+def test_instance_splits_model_overflow_raises():
+    with pytest.raises(ValueError, match="larger tier"):
+        instance_splits(int(2e9), int(1e6), "t2.small")
+    # model EXACTLY fills the tier with a batch still to place: ValueError
+    # (never ZeroDivisionError — the fallback paths only catch ValueError)
+    exact = int((EC2_MEMORY_MB["t2.small"] - 700) / 2 * 1e6)
+    with pytest.raises(ValueError, match="larger tier"):
+        instance_splits(exact, int(1e6), "t2.small")
+    assert instance_splits(exact, 0, "t2.small") == 1  # no batch: exact fit ok
+
+
+def test_simulate_instance_strict_fit_toggle():
+    ex = ServerlessExecutor(backend="instance", instance="t2.small")
+    kw = dict(model_bytes=int(4e9), batch_bytes=int(1e6))
+    with pytest.raises(ValueError, match="larger tier"):
+        ex.simulate_instance([1.0], **kw)  # strict by default
+    # legacy path (executor.run): fall back to no-memory-model accounting
+    rep = ex.simulate_instance([1.0], strict_fit=False, **kw)
+    assert rep.num_splits == 1 and rep.wall_time_s == pytest.approx(1.0)
+
+
+def test_splitting_slows_the_constrained_epoch():
+    cfg = InstanceConfig()
+    free = ServerlessExecutor(
+        backend="instance", instance="t2.large", instance_config=cfg,
+    ).simulate_instance(
+        [1.0] * 4, model_bytes=int(531e6), batch_bytes=int(160e6),
+    )
+    tight = ServerlessExecutor(
+        backend="instance", instance="t2.small", instance_config=cfg,
+    ).simulate_instance(
+        [1.0] * 4, model_bytes=int(531e6), batch_bytes=int(160e6),
+    )
+    assert free.num_splits == 1 and tight.num_splits > 1
+    # same measured compute, but the constrained tier pays per-split
+    # gradient-accumulation overhead on every batch
+    assert tight.wall_time_s > free.wall_time_s
+    assert tight.wall_time_s == pytest.approx(
+        4.0 * (1.0 + (tight.num_splits - 1) * 0.05)
+    )
+
+
+def test_instance_speedup_scales_with_vcpus():
+    assert instance_speedup("t2.small", None) == 1.0  # legacy: no scaling
+    assert instance_speedup("t2.medium", 1.0) == EC2_VCPUS["t2.medium"]
+    assert instance_speedup("t2.nano", 4.0) == pytest.approx(0.25)  # floor
+
+
+# ---------------------------------------------------------------------------
+# Churn: seeded, survivable, downtime unbilled
+# ---------------------------------------------------------------------------
+
+def test_churn_is_seeded_deterministic_and_redos_complete():
+    cfg = InstanceConfig(boot_s=5.0, churn_prob=0.4, churn_downtime_s=2.0, seed=3)
+    a = InstanceRuntime(cfg, instance="t2.small")
+    b = InstanceRuntime(cfg, instance="t2.small")
+    ra = [a.run_epoch([1.0] * 6) for _ in range(3)]
+    rb = [b.run_epoch([1.0] * 6) for _ in range(3)]
+    assert sum(r.churn_drops for r in ra) > 0  # churn actually fired
+    assert [r.makespan_s for r in ra] == [r.makespan_s for r in rb]
+    assert [r.churn_drops for r in ra] == [r.churn_drops for r in rb]
+    for r in ra:
+        # every batch completed despite drops
+        assert r.compute_s == pytest.approx(6.0)
+        # each drop pays detection downtime + a fresh (billed) boot
+        assert r.downtime_s == pytest.approx(r.churn_drops * 2.0)
+
+
+def test_churn_downtime_extends_wall_but_not_the_bill():
+    cfg = InstanceConfig(boot_s=0.0, churn_prob=0.5, churn_downtime_s=7.0, seed=1)
+    rt = InstanceRuntime(cfg, instance="t2.small")
+    res = rt.run_epoch([1.0] * 8)
+    assert res.churn_drops > 0
+    assert res.makespan_s == pytest.approx(res.billed_s + res.downtime_s)
+    cost = rt.price(res)
+    assert cost.unbilled_downtime_s == pytest.approx(res.downtime_s)
+    assert cost.wall_time_s == pytest.approx(res.makespan_s)
+    # the bill covers busy + boot + idle only
+    assert cost.cost_per_peer == pytest.approx(
+        ec2_cost_per_second("t2.small") * res.billed_s
+    )
+
+
+def test_zero_churn_config_never_drops():
+    rt = InstanceRuntime(InstanceConfig(seed=5), instance="t2.small")
+    res = rt.run_epoch([0.5] * 10)
+    assert res.churn_drops == 0 and res.downtime_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Degree-aware wire charging
+# ---------------------------------------------------------------------------
+
+def test_wire_charging_is_degree_aware_through_linkmodel():
+    link = LinkModel(bandwidth_bps=1e9)
+    payload = int(1e9)  # 8 s per transfer at 1 Gb/s
+    rt = InstanceRuntime(instance="t2.small")
+    res = rt.run_epoch(
+        [1.0], upload_bytes=payload, download_bytes=[payload] * 3, link=link,
+    )
+    assert res.wire_s == pytest.approx(4 * 8.0)  # 1 upload + degree 3 downloads
+    assert res.makespan_s == pytest.approx(1.0 + 32.0)
+    # wire time is billed (the VM is up, moving bytes)
+    assert rt.price(res).cost_per_peer == pytest.approx(
+        ec2_cost_per_second("t2.small") * 33.0
+    )
+
+
+def test_wire_bytes_without_link_rejected():
+    """Forgetting link= must not silently under-report the instance wall."""
+    rt = InstanceRuntime(instance="t2.small")
+    with pytest.raises(ValueError, match="LinkModel"):
+        rt.run_epoch([1.0], upload_bytes=int(1e6))
+    with pytest.raises(ValueError, match="LinkModel"):
+        rt.run_epoch([1.0], download_bytes=[int(1e6)])
+
+
+def test_barrier_wait_is_billed_idle():
+    rt = InstanceRuntime(instance="t2.small")
+    res = rt.run_epoch([1.0], barrier_wait_s=9.0)
+    assert res.idle_s == pytest.approx(9.0)
+    assert res.makespan_s == pytest.approx(10.0)
+    assert rt.price(res).billed_s == pytest.approx(10.0)
+
+
+# ---------------------------------------------------------------------------
+# CostReport frontier API
+# ---------------------------------------------------------------------------
+
+def test_cost_report_speedup_and_multiple_reproduce_paper_headline():
+    # the paper's batch-1024 row: 41.2 s serverless vs 258 s instance,
+    # $0.0357 vs $0.0067 -> 84% faster at ~5.4x the cost
+    s = CostReport("serverless", 41.2, 0.03567)
+    i = CostReport("instance", 258.0, 0.00665)
+    assert s.speedup_pct_vs(i) == pytest.approx(84.03, abs=0.01)
+    assert s.cost_multiple_vs(i) == pytest.approx(5.36, abs=0.01)
+    cmp = compare_backends(s, i)
+    assert cmp["speedup_pct"] == pytest.approx(s.speedup_pct_vs(i))
+    assert cmp["cost_multiple"] == pytest.approx(s.cost_multiple_vs(i))
+    assert s.total_usd == pytest.approx(0.03567)  # num_peers defaults to 1
+    assert CostReport("s", 1.0, 0.1, num_peers=4).total_usd == pytest.approx(0.4)
+
+
+def test_pareto_frontier_keeps_only_nondominated_points():
+    fast_expensive = CostReport("serverless", 1.0, 10.0)
+    slow_cheap = CostReport("instance", 10.0, 1.0)
+    dominated = CostReport("instance", 12.0, 2.0)  # slower AND dearer
+    middle = CostReport("instance", 5.0, 5.0)
+    front = pareto_frontier([dominated, slow_cheap, fast_expensive, middle])
+    assert front == [fast_expensive, middle, slow_cheap]
+    # a point dominated on one axis with a tie on the other is dropped
+    tie = CostReport("instance", 10.0, 5.0)
+    assert tie not in pareto_frontier([slow_cheap, tie, fast_expensive])
+
+
+def test_execution_report_cost_report_roundtrip():
+    ex = ServerlessExecutor(backend="instance", instance="t2.medium")
+    rep = ex.simulate_instance([1.0, 2.0])
+    cr = rep.cost_report(num_peers=3, label="baseline")
+    assert cr.backend == "instance" and cr.instance == "t2.medium"
+    assert cr.wall_time_s == rep.wall_time_s
+    assert cr.cost_usd == rep.cost_usd and cr.num_peers == 3
+    assert "t2.medium" in cr.summary()
+
+
+# ---------------------------------------------------------------------------
+# Serverless-vs-instance: the trade-off shape, engine-priced on both sides
+# ---------------------------------------------------------------------------
+
+def test_resource_constrained_comparison_has_the_paper_shape():
+    """Many batches on a weak tier: serverless >= 90% faster, instance
+    cheaper — the 97.34% / 5.4x trade-off, both sides on the engine."""
+    per_batch = [3.0] * 32  # 1-vCPU reference seconds
+    model_bytes, batch_bytes = int(531e6), int(160e6)
+    sex = ServerlessExecutor(instance="t2.small", instance_vcpus=1.0)
+    srep = sex.simulate(per_batch, model_bytes=model_bytes, batch_bytes=batch_bytes)
+    iex = ServerlessExecutor(
+        backend="instance", instance="t2.small",
+        instance_config=InstanceConfig(boot_s=40.0),
+    )
+    irep = iex.simulate_instance(
+        per_batch, model_bytes=model_bytes, batch_bytes=batch_bytes,
+        reference_vcpus=1.0,
+    )
+    assert irep.num_splits > 1  # genuinely resource-constrained
+    cmp = compare_backends(srep.cost_report(), irep.cost_report())
+    assert cmp["speedup_pct"] >= 90.0
+    assert cmp["cost_multiple"] > 1.0  # and the instance is cheaper
+
+
+def test_unknown_tier_rejected():
+    with pytest.raises(ValueError, match="known tiers"):
+        InstanceRuntime(instance="p5.48xlarge")
+
+
+def test_trainer_cost_frontier_is_fresh_and_deterministic():
+    """The frontier is a pure function of the measured times: earlier
+    account_* calls (warm pools, VM boots, allocation history) must not
+    change it, and the instance side prices its configured boot."""
+    from repro.configs import get_config, reduced
+    from repro.core.p2p import Topology
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import sgd
+    from repro.optim.schedules import warmup_cosine
+    from repro.train import P2PTrainer
+
+    tr = P2PTrainer(
+        reduced(get_config("qwen2.5-3b"), vocab_size=64),
+        sgd(), Topology(peer_axes=()), make_host_mesh(1, 1),
+        warmup_cosine(1e-3, 1, 10),
+        backend="instance", instance_config=InstanceConfig(boot_s=40.0),
+    )
+    per = [0.5] * 4
+    a = tr.cost_frontier(per)
+    tr.account_instance(per)  # boots the trainer's persistent VM...
+    tr.account_serverless(per)  # ...and warms the Lambda pools
+    b = tr.cost_frontier(per)  # the frontier must not notice
+    assert a["speedup_pct"] == b["speedup_pct"]
+    assert a["instance_usd"] == b["instance_usd"]
+    assert a["serverless_usd"] == b["serverless_usd"]
+    assert a["instance_wall_s"] >= 40.0  # frontier includes the boot
+    assert tr.account(per).backend == "instance"  # backend-aware dispatch
