@@ -57,7 +57,7 @@ BENCH_JSON = os.path.join(
 )
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, seed: int = 0):
     m = 64 if quick else 235  # batches per peer (paper batch-64 rows: 235)
     rng = np.random.default_rng(0)
     # instance-side seconds on a 1-vCPU reference machine
@@ -87,7 +87,7 @@ def run(quick: bool = True):
             wire_s = link.transfer_s(payload) * (1 + degree)
             # serverless: one fan-out of m Lambdas, shared orchestration
             sex = ServerlessExecutor(
-                runtime=RuntimeConfig(seed=0), instance="t2.small",
+                runtime=RuntimeConfig(seed=seed), instance="t2.small",
                 instance_vcpus=1.0,
             )
             srep = sex.simulate(
@@ -107,7 +107,7 @@ def run(quick: bool = True):
             for tier in tiers:
                 iex = ServerlessExecutor(
                     backend="instance", instance=tier,
-                    instance_config=InstanceConfig(boot_s=40.0, seed=0),
+                    instance_config=InstanceConfig(boot_s=40.0, seed=seed),
                 )
                 try:
                     irep = iex.simulate_instance(
@@ -207,6 +207,7 @@ def run(quick: bool = True):
             {
                 "bench": "fig10_cost_time_frontier",
                 "quick": quick,
+                "seed": seed,
                 "num_batches": m,
                 "batch_bytes": batch_bytes,
                 "models": models,

@@ -1,0 +1,311 @@
+"""Fig. 12 (beyond-paper) — Byzantine-robust aggregation under attack.
+
+The paper's P2P design trusts every peer: the RabbitMQ mailbox delivers
+whatever a peer publishes, and the consumer averages it in. On public
+serverless deployments that trust is the attack surface, so this benchmark
+plants a seeded Byzantine minority (``repro.core.robust.AdversarySpec``)
+into ``LocalP2PCluster`` and sweeps
+
+    attacker fraction x exchange protocol x overlay graph
+
+measuring what each aggregation rule retains of its OWN clean accuracy
+(attacked val-acc / clean val-acc, both evaluated on a non-attacker rank):
+
+  * ``allgather_mean`` — the paper's protocol, breakdown point 0 (one
+    attacker already owns the average);
+  * ``trimmed_mean:f`` — coordinate-wise trimmed mean, survives < f;
+  * ``median`` — coordinate-wise median, survives < 1/2;
+  * ``krum`` — distance-scored selection (Blanchard et al., 2017),
+    survives f <= (P - 3) / 2, full graph only.
+
+The training recipe is the repo's known-to-learn CNN setting (MobileNetV3-
+Small on the procedural MNIST, the same recipe the tier-1 convergence test
+uses), so the clean baselines genuinely converge and degradation is
+attributable to the attack, not to an unlearnable task. Attackers publish
+poison but keep their own local update honest — the victim is an honest
+consumer.
+
+The robustness tax is reported as wire bytes: the robust family needs
+every neighbor's dense gradient (order statistics don't fuse), so it pays
+``allgather_mean`` byte counts where ``psum_mean`` / ``reduce_scatter``
+pay ~2/P of that.
+
+Also rails the zero-attacker equivalence: ``trimmed_mean:0`` must match
+``allgather_mean`` parameter-for-parameter (<= 1e-6) on the host path.
+
+Runtime: the accuracy sweep trains ~10 eight-peer clusters to convergence
+(~20 min quick on a laptop CPU). ``run(smoke=True)`` — what
+``scripts/check.sh --fast`` calls — skips the sweep and checks only the
+fast rails (equivalence, wire accounting, adversary bookkeeping) without
+touching BENCH_fig12_byzantine.json.
+
+Emits BENCH_fig12_byzantine.json (rows + claims).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import AdversarySpec, LocalP2PCluster
+from repro.core.exchange import ExchangeContext, get_exchange
+from repro.data import make_dataset
+from repro.optim import sgd
+
+from benchmarks.common import record, small_mnist
+
+BENCH_JSON = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_fig12_byzantine.json"
+)
+
+NUM_PEERS = 8
+ATTACK = "sign_flip"
+ATTACK_SCALE = 10.0
+# (protocol spec, graph spec) — krum refuses sparse graphs, so its gossip
+# cell is structurally absent, not skipped
+CELLS = (
+    ("allgather_mean", "full"),
+    ("trimmed_mean:0.25", "full"),
+    ("median", "full"),
+    ("krum", "full"),
+    ("median", "gossip:4"),
+)
+ROBUST_FULL = ("trimmed_mean:0.25", "median", "krum")
+
+
+def _sweep_cluster(exchange, graph, adversary, seed, batches_per_epoch):
+    """The tier-1 convergence recipe (test_system), widened to 8 peers."""
+    return LocalP2PCluster(
+        get_config("mobilenet-v3-small"),
+        make_dataset("mnist", size=640, image_hw=12, channels=1),
+        num_peers=NUM_PEERS,
+        batch_size=16,
+        batches_per_epoch=batches_per_epoch,
+        optimizer=sgd(momentum=0.9),
+        lr=0.05,
+        sync=True,
+        exchange=exchange,
+        graph=graph,
+        adversary=adversary,
+        seed=seed,
+    )
+
+
+def _rail_cluster(exchange, adversary=None, *, seed=0, reject_nonfinite=False):
+    """Tiny squeezenet cluster for the fast (non-accuracy) rails."""
+    return LocalP2PCluster(
+        get_config("squeezenet1.1"),
+        small_mnist(size=128, hw=8),
+        num_peers=4,
+        batch_size=8,
+        batches_per_epoch=2,
+        optimizer=sgd(momentum=0.9),
+        lr=0.05,
+        sync=True,
+        exchange=exchange,
+        adversary=adversary,
+        reject_nonfinite=reject_nonfinite,
+        seed=seed,
+    )
+
+
+def _honest_rank(adversary, num_peers: int) -> int:
+    bad = set(adversary.attackers(num_peers)) if adversary else set()
+    return min(r for r in range(num_peers) if r not in bad)
+
+
+def _sweep_rows(fractions, seed, *, epochs, batches_per_epoch):
+    rows = []
+    for exchange, graph in CELLS:
+        for frac in fractions:
+            adv = (
+                AdversarySpec(
+                    fraction=frac, attack=ATTACK, scale=ATTACK_SCALE, seed=seed
+                )
+                if frac > 0 else None
+            )
+            cluster = _sweep_cluster(exchange, graph, adv, seed,
+                                     batches_per_epoch)
+            cluster.run(epochs=epochs)
+            rank = _honest_rank(adv, NUM_PEERS)
+            val_loss, val_acc = cluster.evaluate(rank, num_batches=4)
+            cc = cluster.comm_cost()
+            rows.append(
+                {
+                    "exchange": exchange,
+                    "graph": graph,
+                    "attack": ATTACK if frac > 0 else "none",
+                    "attacker_frac": frac,
+                    "num_attackers": (
+                        adv.num_attackers(NUM_PEERS) if adv else 0
+                    ),
+                    "eval_rank": rank,
+                    "val_loss": val_loss,
+                    "val_acc": val_acc,
+                    "wire_bytes_per_peer_step": cc.wire_bytes_per_step,
+                    "poisoned_publishes": cluster.mailbox.stats[
+                        "poisoned_publishes"
+                    ],
+                }
+            )
+            record(
+                f"fig12/{exchange}/{graph}/frac{frac:g}",
+                0.0,
+                f"val_acc={val_acc:.3f};val_loss={val_loss:.4f};"
+                f"wire_bytes={cc.wire_bytes_per_step}",
+            )
+    return rows
+
+
+def _equivalence_err(seed: int) -> float:
+    """max |param delta| between trimmed_mean:0 and allgather_mean."""
+    a = _rail_cluster("allgather_mean", seed=seed)
+    b = _rail_cluster("trimmed_mean:0", seed=seed)
+    a.run(epochs=2)
+    b.run(epochs=2)
+    return max(
+        float(jnp.max(jnp.abs(x - y)))
+        for x, y in zip(
+            jax.tree.leaves(a.peers[0].params),
+            jax.tree.leaves(b.peers[0].params),
+        )
+    )
+
+
+def _wire_overhead_rows():
+    """The robustness tax vs the fused collectives, dense model bytes."""
+    grads_like = {
+        "w": jnp.zeros((256, 256), jnp.float32),
+        "b": jnp.zeros((4096,), jnp.float32),
+    }
+    ctx = ExchangeContext(num_peers=NUM_PEERS)
+    rows = []
+    for spec in ("psum_mean", "reduce_scatter", "allgather_mean",
+                 "trimmed_mean:0.25", "median", "krum"):
+        proto = get_exchange(spec)
+        wb = proto.wire_bytes(grads_like, ctx)
+        rows.append({"exchange": spec, "wire_bytes_per_peer_step": wb})
+        record(f"fig12/wire/{spec}", 0.0, f"wire_bytes={wb}")
+    return rows
+
+
+def _smoke(seed: int) -> dict:
+    """The fast rails only (for check.sh --fast / CI): equivalence, wire
+    accounting, adversary + nonfinite-guard bookkeeping. No training
+    sweep, no BENCH json."""
+    equiv_err = _equivalence_err(seed)
+    wire = _wire_overhead_rows()
+    adv = AdversarySpec(fraction=0.25, attack=ATTACK, scale=ATTACK_SCALE,
+                        seed=seed)
+    c = _rail_cluster("median", adv, seed=seed, reject_nonfinite=True)
+    c.run(epochs=2)
+    wb = {r["exchange"]: r["wire_bytes_per_peer_step"] for r in wire}
+    claims = {
+        "zero_trim_equiv_mean": equiv_err <= 1e-6,
+        "adversary_publishes_counted": (
+            c.mailbox.stats["poisoned_publishes"]
+            == adv.num_attackers(4) * 2
+        ),
+        "robust_pay_dense_bytes": all(
+            wb[p] == wb["allgather_mean"] for p in ROBUST_FULL
+        )
+        and wb["allgather_mean"] > 2 * wb["psum_mean"],
+    }
+    record(
+        "fig12/claim:byzantine_smoke",
+        0.0,
+        ";".join(f"{k}={v}" for k, v in claims.items())
+        + f";equiv_err={equiv_err:.2e};holds={all(claims.values())}",
+    )
+    assert all(claims.values()), claims
+    return claims
+
+
+def run(quick: bool = True, seed: int = 0, smoke: bool = False):
+    if smoke:
+        return _smoke(seed)
+    fractions = (0.0, 0.25) if quick else (0.0, 0.25, 0.375)
+    epochs = 6 if quick else 10
+    batches_per_epoch = 4 if quick else 5
+    rows = _sweep_rows(fractions, seed, epochs=epochs,
+                       batches_per_epoch=batches_per_epoch)
+    equiv_err = _equivalence_err(seed)
+    wire = _wire_overhead_rows()
+
+    def acc(exchange, graph, frac):
+        return next(
+            r["val_acc"] for r in rows
+            if r["exchange"] == exchange and r["graph"] == graph
+            and r["attacker_frac"] == frac
+        )
+
+    def retention(exchange, graph, frac=0.25):
+        return acc(exchange, graph, frac) / max(acc(exchange, graph, 0.0),
+                                                1e-9)
+
+    mean_ret = retention("allgather_mean", "full")
+    robust_rets = {p: retention(p, "full") for p in ROBUST_FULL}
+    wb = {r["exchange"]: r["wire_bytes_per_peer_step"] for r in wire}
+    claims = {
+        # zero attackers: trimmed_mean:0 IS allgather_mean (<= 1e-6)
+        "zero_trim_equiv_mean": equiv_err <= 1e-6,
+        # the paper's plain mean collapses under a 25% sign-flip minority
+        "mean_degrades_under_attack": mean_ret < 0.5,
+        # every robust protocol retains most of its clean accuracy...
+        "robust_retain_under_attack": all(
+            v >= 0.55 for v in robust_rets.values()
+        ),
+        # ...and beats the attacked mean outright
+        "robust_beat_mean_under_attack": all(
+            acc(p, "full", 0.25) > acc("allgather_mean", "full", 0.25) + 0.1
+            for p in ROBUST_FULL
+        ),
+        # sparse overlay: the closed-neighborhood median survives too
+        "gossip_median_retains": retention("median", "gossip:4") >= 0.5,
+        # honest wire accounting: robustness costs dense allgather bytes
+        "robust_pay_dense_bytes": all(
+            wb[p] == wb["allgather_mean"] for p in ROBUST_FULL
+        )
+        and wb["allgather_mean"] > 2 * wb["psum_mean"],
+    }
+    record(
+        "fig12/claim:byzantine_robustness",
+        0.0,
+        ";".join(f"{k}={v}" for k, v in claims.items())
+        + f";holds={all(claims.values())}",
+    )
+    with open(BENCH_JSON, "w") as fp:
+        json.dump(
+            {
+                "bench": "fig12_byzantine",
+                "quick": quick,
+                "seed": seed,
+                "num_peers": NUM_PEERS,
+                "attack": ATTACK,
+                "attack_scale": ATTACK_SCALE,
+                "fractions": list(fractions),
+                "epochs": epochs,
+                "batches_per_epoch": batches_per_epoch,
+                "zero_trim_equivalence_max_err": equiv_err,
+                "sweep_rows": rows,
+                "wire_rows": wire,
+                "retention_at_25pct": {
+                    "allgather_mean": mean_ret,
+                    **robust_rets,
+                },
+                "claims": claims,
+            },
+            fp,
+            indent=2,
+        )
+    record("fig12/json", 0.0, f"path={os.path.relpath(BENCH_JSON)}")
+    return claims
+
+
+if __name__ == "__main__":
+    import sys
+
+    run(smoke="--smoke" in sys.argv)

@@ -27,7 +27,7 @@ from repro.optim import sgd
 from benchmarks.common import record, small_mnist
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, seed: int = 0):
     ds = small_mnist(size=4096, hw=16 if quick else 28)
     peer_counts = [2, 4] if quick else [4, 8, 12]
     m_values = [8, 32, 96] if quick else [15, 30, 118, 235]  # paper's batch counts
@@ -43,7 +43,7 @@ def run(quick: bool = True):
                 cl = LocalP2PCluster(
                     model, ds, num_peers=P, batch_size=B,
                     batches_per_epoch=m, optimizer=sgd(momentum=0.9),
-                    lr=0.01, executor=ex,
+                    lr=0.01, executor=ex, seed=seed,
                 )
                 cl.run_epoch_sync(0)
                 walls[backend] = float(

@@ -20,7 +20,7 @@ from repro.optim import sgd
 from benchmarks.common import record, small_mnist
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, seed: int = 0):
     ds = small_mnist(size=1024, hw=12 if quick else 28)
     peer_counts = [2, 4] if quick else [2, 4, 8, 12]
     models_ = ["squeezenet1.1", "mobilenet-v3-small"] if quick else [
@@ -37,7 +37,7 @@ def run(quick: bool = True):
             cl = LocalP2PCluster(
                 get_config(mname), ds, num_peers=P, batch_size=B,
                 batches_per_epoch=m, optimizer=sgd(momentum=0.9), lr=0.01,
-                network_bandwidth_bps=bandwidth,
+                network_bandwidth_bps=bandwidth, seed=seed,
             )
             cl.run_epoch_sync(0)
             peer = cl.peers[0]

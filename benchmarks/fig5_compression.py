@@ -29,21 +29,21 @@ PEERS = 4
 BANDWIDTH = 1e9  # 1 Gb/s
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, seed: int = 0):
     cfg = get_config("squeezenet1.1" if quick else "vgg11")
-    params = models.init_model(jax.random.PRNGKey(0), cfg)
+    params = models.init_model(jax.random.PRNGKey(seed + 0), cfg)
     grads = jax.tree.map(
-        lambda p: jax.random.normal(jax.random.PRNGKey(1), p.shape), params
+        lambda p: jax.random.normal(jax.random.PRNGKey(seed + 1), p.shape), params
     )
     qcfg = QSGDConfig(levels=127, bucket=2048)
 
     # warm the jits
-    payload, _ = quantize_tree(grads, jax.random.PRNGKey(2), qcfg)
+    payload, _ = quantize_tree(grads, jax.random.PRNGKey(seed + 2), qcfg)
     jax.block_until_ready(jax.tree.leaves(dequantize_tree(payload, qcfg)))
 
     raw = raw_bytes(grads)
     t0 = time.perf_counter()
-    payload, _ = quantize_tree(grads, jax.random.PRNGKey(3), qcfg)
+    payload, _ = quantize_tree(grads, jax.random.PRNGKey(seed + 3), qcfg)
     jax.block_until_ready(jax.tree.leaves(payload))
     t_q = time.perf_counter() - t0
     comp = payload_bytes(payload)

@@ -20,7 +20,7 @@ from repro.optim import sgd
 from benchmarks.common import record, small_mnist
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, seed: int = 0):
     ds = small_mnist(size=768, hw=12)
     epochs = 6 if quick else 30
     histories = {}
@@ -34,6 +34,7 @@ def run(quick: bool = True):
             sync=(mode == "sync"),
             exchange="allgather_mean",  # Algorithm 1 wire format, via registry
             peer_speeds=None if mode == "sync" else [1.0, 1.0, 4.0, 8.0],
+            seed=seed,
         )
         hist = cl.run(epochs)
         accs = [h.get("val_acc", np.nan) for h in hist]

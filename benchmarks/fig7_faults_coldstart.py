@@ -35,7 +35,7 @@ BENCH_JSON = os.path.join(
 )
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, seed: int = 0):
     m = 32 if quick else 235  # batches per peer (paper batch-64 rows: 235)
     epochs = 3 if quick else 6
     rng = np.random.default_rng(0)
@@ -52,7 +52,7 @@ def run(quick: bool = True):
                         failure_rate=failure_rate,
                         cold_start_s=cold_start_s,
                         concurrency_limit=64,
-                        seed=0,
+                        seed=seed,
                     ),
                     allocation=(
                         "static" if alloc == "static"
@@ -123,6 +123,7 @@ def run(quick: bool = True):
             {
                 "bench": "fig7_faults_coldstart",
                 "quick": quick,
+                "seed": seed,
                 "num_batches": m,
                 "epochs": epochs,
                 "instance_wall_s": instance_wall,

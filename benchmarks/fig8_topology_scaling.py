@@ -40,13 +40,13 @@ GRAPHS = ("full", "ring", "gossip:3")
 BANDWIDTH = 1e9
 
 
-def _wire_rows(peer_counts, grads_like):
+def _wire_rows(peer_counts, grads_like, seed: int = 0):
     proto = get_exchange("allgather_mean")
     link = LinkModel(bandwidth_bps=BANDWIDTH)
     rows = []
     for P in peer_counts:
         for spec in GRAPHS:
-            g = get_graph(spec, P, seed=0)
+            g = get_graph(spec, P, seed=seed)
             ctx = ExchangeContext(
                 num_peers=P,
                 graph=g,
@@ -77,7 +77,7 @@ def _wire_rows(peer_counts, grads_like):
     return rows
 
 
-def _convergence_rows(num_peers: int, epochs: int):
+def _convergence_rows(num_peers: int, epochs: int, seed: int = 0):
     from repro.configs import get_config
     from repro.core import LocalP2PCluster
     from repro.optim import sgd
@@ -95,7 +95,7 @@ def _convergence_rows(num_peers: int, epochs: int):
             lr=0.05,
             sync=True,
             graph=spec,
-            seed=0,
+            seed=seed,
         )
         history = cluster.run(epochs=epochs)
         last = history[-1]
@@ -117,16 +117,16 @@ def _convergence_rows(num_peers: int, epochs: int):
     return rows
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, seed: int = 0):
     peer_counts = (4, 8, 16, 32) if quick else (4, 8, 16, 32, 64, 128)
     grads_like = {
         "w": jnp.zeros((256, 256), jnp.float32),
         "b": jnp.zeros((4096,), jnp.float32),
     }
-    wire = _wire_rows(peer_counts, grads_like)
+    wire = _wire_rows(peer_counts, grads_like, seed=seed)
     # P=6 is the smallest count where gossip:3 is genuinely sparse (at
     # P=4 it degenerates to the complete graph and would test nothing)
-    conv = _convergence_rows(num_peers=6, epochs=2 if quick else 6)
+    conv = _convergence_rows(num_peers=6, epochs=2 if quick else 6, seed=seed)
 
     def pick(P, spec):
         return next(
@@ -176,6 +176,7 @@ def run(quick: bool = True):
             {
                 "bench": "fig8_topology_scaling",
                 "quick": quick,
+                "seed": seed,
                 "peer_counts": list(peer_counts),
                 "graphs": list(GRAPHS),
                 "bandwidth_bps": BANDWIDTH,

@@ -12,7 +12,7 @@ from benchmarks.common import record
 DEFAULT_JSON = os.path.join(os.path.dirname(__file__), "..", "dryrun_singlepod.json")
 
 
-def run(quick: bool = True, path: str = DEFAULT_JSON):
+def run(quick: bool = True, path: str = DEFAULT_JSON, seed: int = 0):
     if not os.path.exists(path):
         record("roofline/missing", 0.0, f"run launch/dryrun.py --all --json {path}")
         return []

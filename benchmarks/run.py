@@ -16,6 +16,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale settings")
     ap.add_argument("--only", default=None, help="comma-separated module keys")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base seed, recorded in every BENCH_*.json")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -27,6 +29,7 @@ def main() -> None:
         fig8_topology_scaling,
         fig9_sharded_aggregation,
         fig10_cost_time_frontier,
+        fig12_byzantine,
         roofline,
         table1_resource_stages,
         table2_3_cost,
@@ -44,6 +47,7 @@ def main() -> None:
         "fig8": fig8_topology_scaling,
         "fig9": fig9_sharded_aggregation,
         "fig10": fig10_cost_time_frontier,
+        "fig12": fig12_byzantine,
         "roofline": roofline,
     }
     if args.only:
@@ -55,7 +59,7 @@ def main() -> None:
     for name, mod in suites.items():
         t0 = time.time()
         try:
-            mod.run(quick=not args.full)
+            mod.run(quick=not args.full, seed=args.seed)
             record(f"suite/{name}", (time.time() - t0) * 1e6, "status=ok")
         except Exception as e:  # pragma: no cover
             failures.append(name)

@@ -18,7 +18,7 @@ from repro.optim import sgd
 from benchmarks.common import record
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, seed: int = 0):
     models_ = ["squeezenet1.1", "mobilenet-v3-small"] + ([] if quick else ["vgg11"])
     datasets = {
         "mnist": make_dataset("mnist", size=256, image_hw=12 if quick else 28, channels=1),
@@ -33,7 +33,7 @@ def run(quick: bool = True):
                 num_peers=2 if quick else 4,
                 batch_size=16,
                 batches_per_epoch=2 if quick else 30,
-                optimizer=sgd(momentum=0.9), lr=0.01, sync=True,
+                optimizer=sgd(momentum=0.9), lr=0.01, sync=True, seed=seed,
             )
             cl.run(epochs, eval_every=1)
             t = cl.peers[0].metrics.table()

@@ -26,7 +26,7 @@ PAPER_TABLE2_TOTALS = {1024: 0.03567, 512: 0.03069, 128: 0.03451, 64: 0.05435}
 PAPER_TABLE3_TOTALS = {1024: 0.00665, 512: 0.00717, 128: 0.00851, 64: 0.01017}
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, seed: int = 0):
     max_rel_err = 0.0
     for batch in (1024, 512, 128, 64):
         r2 = paper_table2_row(batch)

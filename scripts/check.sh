@@ -34,6 +34,10 @@ for n in available_graphs():
   python -m benchmarks.run --only fig9
   echo "== smoke: cost-time frontier, serverless vs instance (Fig. 10) =="
   python -m benchmarks.run --only fig10
+  echo "== smoke: byzantine-robust aggregation rails (Fig. 12) =="
+  # fast rails only (equivalence, wire accounting, adversary bookkeeping);
+  # the full attack sweep is `python -m benchmarks.run --only fig12`
+  python -m benchmarks.fig12_byzantine --smoke
   echo "== smoke: docs link check =="
   python scripts/check_links.py
 }

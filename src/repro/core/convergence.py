@@ -9,6 +9,7 @@ at the epoch limit.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -36,6 +37,11 @@ class ReduceLROnPlateau:
         self.num_reductions = 0
 
     def _improved(self, metric: float) -> bool:
+        if not math.isfinite(metric):
+            # NaN compares False against everything, which without this
+            # guard would leave bad_epochs frozen; Inf/-Inf would become an
+            # unbeatable "best". A diverged metric is always a bad epoch.
+            return False
         if self.best is None:
             return True
         if self.mode == "min":
@@ -70,7 +76,7 @@ class EarlyStopping:
 
     def step(self, metric: float) -> bool:
         """Feed one validation metric; returns True when training should stop."""
-        improved = (
+        improved = math.isfinite(metric) and (
             self.best is None
             or (self.mode == "min" and metric < self.best - self.min_delta)
             or (self.mode == "max" and metric > self.best + self.min_delta)

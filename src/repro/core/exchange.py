@@ -50,6 +50,7 @@ import numpy as np
 from jax import lax
 
 from repro.core import compression as C
+from repro.core import robust as R
 from repro.core.shard import ShardPlan
 
 
@@ -78,6 +79,12 @@ class ExchangeContext:
     staleness: int = 1
     graph: Any = None  # resolved repro.core.graph.PeerGraph, or None
     mixing: Any = None  # (P, P) fp32 MH matrix; None => uniform 1/P (full)
+    # robust-aggregation knobs (see repro.core.robust); a parameterized
+    # protocol spec ("trimmed_mean:0.25", "krum:3") overrides these
+    trim_frac: float = 0.0  # trimmed_mean: fraction dropped from EACH end
+    krum_m: int = 1  # krum: multi-Krum selection count
+    krum_f: Optional[int] = None  # krum: assumed attackers (None = max tolerable)
+    robust_clip: float = 0.0  # >0: per-peer norm clip before robust combine
 
     def __post_init__(self):
         # A graph sized for a different peer count silently mis-mixes (the
@@ -137,6 +144,18 @@ class ExchangeProtocol(abc.ABC):
     def host_decode(self, payload, grads_like, ctx: ExchangeContext):
         """Wire payload -> this peer's dense fp32 gradient contribution."""
         return jax.tree.map(lambda g: g.astype(jnp.float32), payload)
+
+    def host_combine(self, grads_peers, rank: int, ctx: ExchangeContext):
+        """Protocol-specific host-path aggregation, or ``None`` for the
+        default (graph-weighted mean) arithmetic.
+
+        ``grads_peers`` maps contributor rank -> decoded fp32 gradient
+        (always including ``rank``'s own). Protocols whose estimator is
+        NOT a weighted mean (the robust family) override this; the
+        cluster's ``_update`` dispatches here first and falls back to the
+        legacy Metropolis–Hastings / plain-mean path on ``None``.
+        """
+        return None
 
     # -- accounting ----------------------------------------------------------
     def wire_bytes_per_edge(self, grads_like, ctx: ExchangeContext) -> int:
@@ -202,15 +221,28 @@ def available_exchanges() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
-def get_exchange(name: str) -> ExchangeProtocol:
+def get_exchange(spec: str) -> ExchangeProtocol:
+    """Resolve a protocol spec: a registered name with an optional
+    parameter suffix, mirroring the graph registry — ``"allgather_mean"``,
+    ``"trimmed_mean:0.25"``, ``"krum:3"``. The parameter overrides the
+    matching :class:`ExchangeContext` knob for this instance."""
+    name, _, arg = str(spec).partition(":")
     try:
         cls = _REGISTRY[name]
     except KeyError:
         raise ValueError(
-            f"unknown exchange protocol {name!r}; registered protocols: "
+            f"unknown exchange protocol {spec!r}; registered protocols: "
             f"{', '.join(available_exchanges())}"
         ) from None
-    return cls()
+    if not arg:
+        return cls()
+    try:
+        return cls(param=arg)
+    except TypeError:
+        raise ValueError(
+            f"exchange protocol {name!r} does not take a ':' parameter "
+            f"(got {spec!r})"
+        ) from None
 
 
 # ---------------------------------------------------------------------------
@@ -553,3 +585,142 @@ class ReduceScatterMean(ExchangeProtocol):
         owner) + this peer's re-broadcast aggregated shard."""
         P_ = max(int(ctx.num_peers), 1)
         return P_ * self.wire_bytes_per_edge(grads_like, ctx)
+
+
+# ---------------------------------------------------------------------------
+# Byzantine-robust protocols (estimators in repro.core.robust)
+# ---------------------------------------------------------------------------
+
+
+class _RobustExchange(ExchangeProtocol):
+    """Shared machinery of the robust family: gather the full dense bank,
+    optionally norm-clip each peer row (``ctx.robust_clip``), and hand the
+    bank to the subclass estimator.
+
+    Wire accounting is HONEST about the robustness tax: these protocols
+    need every neighbor's dense gradient materialized (order statistics /
+    distance scores don't decompose into a fused reduction), so they
+    inherit the dense ``allgather_mean`` byte counts — ``(P-1) x model``
+    per peer on the full mesh, vs ``2(P-1)/P x model`` for ``psum_mean``
+    and ``2(P-1)/P x model`` total for ``reduce_scatter``. That delta IS
+    the robustness-vs-wire-cost trade-off fig12 quantifies.
+    """
+
+    def _mask(self, ctx: ExchangeContext):
+        """(P,) closed-neighborhood mask for this rank, or None on the
+        full graph (every peer is a member — skip the mask arithmetic)."""
+        if ctx.mixing is None:
+            return None
+        closed = np.asarray(ctx.graph.adjacency) | np.eye(
+            ctx.num_peers, dtype=bool
+        )
+        r = lax.axis_index(ctx.axis)
+        return lax.dynamic_index_in_dim(
+            jnp.asarray(closed), r, 0, keepdims=False
+        )
+
+    def _prepare(self, bank, ctx: ExchangeContext):
+        if ctx.robust_clip > 0.0:
+            return R.clip_bank_to_norm(bank, ctx.robust_clip)
+        return bank
+
+    def _aggregate(self, bank, mask, ctx: ExchangeContext):
+        raise NotImplementedError
+
+    def combine(self, grads, ctx, *, key=None, state=None):
+        bank = jax.tree.map(
+            lambda g: lax.all_gather(g.astype(ctx.wire_dtype), ctx.axis)
+            .astype(jnp.float32),
+            grads,
+        )
+        mask = self._mask(ctx)
+        return self._aggregate(self._prepare(bank, ctx), mask, ctx), state
+
+    def host_combine(self, grads_peers, rank: int, ctx: ExchangeContext):
+        """Robust aggregate over the contributions that actually arrived
+        (the mailbox already restricted consumption to graph edges, so
+        the arrived set IS the closed neighborhood — possibly smaller
+        under churn, which the order statistics absorb)."""
+        ranks = sorted(grads_peers)
+        bank = jax.tree.map(
+            lambda *xs: jnp.stack([jnp.asarray(x, jnp.float32) for x in xs]),
+            *[grads_peers[j] for j in ranks],
+        )
+        return self._aggregate(self._prepare(bank, ctx), None, ctx)
+
+
+@register_exchange("trimmed_mean")
+class TrimmedMeanExchange(_RobustExchange):
+    """Coordinate-wise trimmed mean: drop the ``f`` fraction of values
+    from each end of every coordinate, mean the rest. ``trimmed_mean:f``
+    (e.g. ``trimmed_mean:0.25``) sets the trim; bare ``trimmed_mean``
+    reads ``ctx.trim_frac``. Survives up to ``f`` Byzantine peers per
+    coordinate; ``f=0`` is exactly the plain mean (the equivalence rail).
+    Composes with sparse overlays: each peer trims over its closed
+    neighborhood instead of mixing with MH weights."""
+
+    def __init__(self, param: Optional[str] = None):
+        self.frac: Optional[float] = None
+        if param is not None:
+            self.frac = float(param)
+            if not 0.0 <= self.frac < 0.5:
+                raise ValueError(
+                    f"trimmed_mean trim fraction must be in [0, 0.5), "
+                    f"got {self.frac}"
+                )
+
+    def _trim(self, ctx) -> float:
+        return ctx.trim_frac if self.frac is None else self.frac
+
+    def _aggregate(self, bank, mask, ctx):
+        frac = self._trim(ctx)
+
+        def leaf(b):
+            # host path under churn: bank rows = contributions that
+            # ARRIVED, possibly < num_peers — size the mask from the leaf
+            m = jnp.ones((b.shape[0],), bool) if mask is None else mask
+            return R.masked_trimmed_mean(b, m, frac)
+
+        return jax.tree.map(leaf, bank)
+
+
+@register_exchange("median")
+class CoordinateMedianExchange(_RobustExchange):
+    """Coordinate-wise median — the no-hyperparameter robust baseline
+    with breakdown point 1/2 per coordinate. Composes with sparse
+    overlays (median over the closed neighborhood)."""
+
+    def _aggregate(self, bank, mask, ctx):
+        def leaf(b):
+            m = jnp.ones((b.shape[0],), bool) if mask is None else mask
+            return R.masked_median(b, m)
+
+        return jax.tree.map(leaf, bank)
+
+
+@register_exchange("krum")
+class KrumExchange(_RobustExchange):
+    """Krum / multi-Krum (Blanchard et al., 2017): score every
+    contribution by its summed squared distance to its ``P - f - 2``
+    nearest peers, average the ``m`` lowest-scored gradients.
+    ``krum`` selects 1 (classic Krum); ``krum:m`` averages the top m.
+    The pairwise distances need ALL contributions, so sparse overlays
+    are refused (``requires_full_graph``), like ``reduce_scatter``."""
+
+    requires_full_graph = True
+
+    def __init__(self, param: Optional[str] = None):
+        self.m: Optional[int] = None
+        if param is not None:
+            self.m = int(param)
+            if self.m < 1:
+                raise ValueError(f"krum selection count must be >= 1, got {self.m}")
+
+    def _select_count(self, ctx) -> int:
+        return ctx.krum_m if self.m is None else self.m
+
+    def _aggregate(self, bank, mask, ctx):
+        flat, unflatten = R.flatten_bank(bank)
+        m = min(self._select_count(ctx), int(flat.shape[0]))
+        agg, _ = R.krum_select(flat, m=m, f=ctx.krum_f)
+        return unflatten(agg)

@@ -68,7 +68,7 @@ class HostMailbox:
         self._barrier: List[Tuple[int, int]] = []  # (peer, epoch) completions
         self.stats = {
             "publishes": 0, "consumes": 0, "s3_indirections": 0, "blocked": 0,
-            "compacted": 0,
+            "compacted": 0, "poisoned_publishes": 0, "rejected_nonfinite": 0,
         }
         # (consumer, producer) pairs actually delivered — lets tests assert
         # every delivery rode a graph edge, churn or not
@@ -77,10 +77,14 @@ class HostMailbox:
     # -- gradient queues ---------------------------------------------------
     def publish(
         self, peer: int, payload: Any, *, nbytes: int, time: float, epoch: int,
-        shard: Any = None,
+        shard: Any = None, poisoned: bool = False,
     ):
         if not 0 <= peer < self.num_peers:
             raise IndexError(f"peer {peer} out of range [0, {self.num_peers})")
+        if poisoned:
+            # Adversary-model bookkeeping only: the broker can't actually
+            # tell; robust consumers must survive without this signal.
+            self.stats["poisoned_publishes"] += 1
         via_s3 = nbytes > MESSAGE_CAP_BYTES
         msg = Message(
             payload, time, epoch, nbytes=nbytes,

@@ -39,6 +39,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core import compression as C
+from repro.core import robust as R
 from repro.core.exchange import (
     ExchangeContext,
     ExchangeProtocol,
@@ -62,6 +63,12 @@ class Topology:
     async_mode: bool = False  # DEPRECATED: use exchange="async"
     staleness: int = 1  # async: consume banks published K steps ago
     topk_frac: float = 0.01  # topk: fraction of entries shipped
+    # robust-aggregation knobs (see repro.core.robust); a parameterized
+    # spec (exchange="trimmed_mean:0.25" / "krum:3") overrides these
+    trim_frac: float = 0.0  # trimmed_mean: fraction dropped from EACH end
+    krum_m: int = 1  # krum: multi-Krum selection count
+    krum_f: Optional[int] = None  # krum: assumed attackers (None = max)
+    robust_clip: float = 0.0  # >0: per-peer norm clip before robust combine
     serverless: bool = True  # fan micro-batches out over lambda_axis
     grad_clip: float = 0.0
     # beyond-paper knobs (EXPERIMENTS.md §Perf):
@@ -151,6 +158,10 @@ def exchange_context(
         staleness=topo.staleness,
         graph=graph,
         mixing=mixing,
+        trim_frac=topo.trim_frac,
+        krum_m=topo.krum_m,
+        krum_f=topo.krum_f,
+        robust_clip=topo.robust_clip,
     )
 
 
@@ -354,6 +365,8 @@ def build_p2p_train_step(
     topo: Topology,
     mesh,
     schedule: Callable[[jnp.ndarray], jnp.ndarray],
+    *,
+    adversary: Optional[R.AdversarySpec] = None,
 ):
     """Returns step(train_state, batch) -> (train_state, metrics).
 
@@ -361,9 +374,25 @@ def build_p2p_train_step(
     One code path serves both the peer (``shard_map`` over ``peer_axes``)
     and the no-peer (single worker) case: the peer body is identical, only
     the wrapping differs.
+
+    ``adversary`` (a :class:`repro.core.robust.AdversarySpec`) makes the
+    seeded attacker ranks publish poisoned gradients: their bank row is
+    replaced (sign-flip / scaled noise) *before* the exchange collective,
+    so every consumer — and the exchange protocol's estimator — sees the
+    poisoned contribution. ``stale_replay`` is payload-level and only
+    exists on the host mailbox path; it is refused here at build time.
     """
     protocol = topo.protocol() if topo.peer_axes else None
     ctx = exchange_context(topo, mesh) if topo.peer_axes else None
+    attack_mask = None
+    if adversary is not None and adversary.active and topo.peer_axes:
+        if adversary.attack == "stale_replay":
+            raise ValueError(
+                "stale_replay replays a previous epoch's wire payload and "
+                "only exists on the host mailbox path (LocalP2PCluster); "
+                "use sign_flip or scaled_noise on the device path"
+            )
+        attack_mask = jnp.asarray(adversary.mask(ctx.num_peers))
 
     def peer_body(params, opt_state, step_idx, key, batch, mailbox):
         batch = lambda_shard(batch, topo)
@@ -415,6 +444,15 @@ def build_p2p_train_step(
         else:
             gnorm = jnp.zeros((), jnp.float32)
         step_key = jax.random.fold_in(key, step_idx)
+        if attack_mask is not None:
+            # Byzantine ranks publish a poisoned contribution: the honest
+            # gradient still exists locally, only the exchanged row flips.
+            r = lax.axis_index(topo.axis)
+            poison_key = jax.random.fold_in(jax.random.fold_in(step_key, 7919), r)
+            poisoned = R.poison_gradients(grads, adversary, poison_key)
+            grads = jax.tree.map(
+                lambda h, p: jnp.where(attack_mask[r], p, h), grads, poisoned
+            )
         if protocol is None:
             avg, new_mailbox = grads, mailbox
         else:

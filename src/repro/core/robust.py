@@ -1,0 +1,333 @@
+"""Byzantine-robust aggregation — combinators + the adversary model.
+
+The paper motivates P2P training with fault tolerance, but churn and
+stragglers are *benign* faults: every published gradient is assumed
+honest. SPIRT (arXiv:2309.14148) extends exactly this architecture with
+robust aggregation against *malicious* peers, and the fault-tolerance
+architecture study (arXiv:2302.13995) argues robustness is the reason to
+pay the P2P communication overhead at all. This module supplies the two
+halves of that scenario:
+
+* **Robust combinators** — pure functions over a peer-stacked gradient
+  bank (leaves shaped ``(P, ...)``): coordinate-wise trimmed mean,
+  coordinate median, Krum / multi-Krum distance scoring, and per-peer
+  gradient-norm clipping. The registered ``trimmed_mean:f`` / ``median``
+  / ``krum[:m]`` :class:`~repro.core.exchange.ExchangeProtocol`s are thin
+  wrappers over these, so the device ``shard_map`` path and the host
+  mailbox path share one implementation of the estimator math.
+
+  The masked variants take a ``(P,)`` membership mask so the same code
+  serves the full mesh (mask = all peers) and a sparse
+  :class:`~repro.core.graph.PeerGraph` overlay, where each peer computes
+  the order statistic over its *closed neighborhood* (self + graph
+  neighbors) instead of a Metropolis–Hastings weighted mix — robust
+  order statistics do not commute with weighted averaging, so
+  neighborhood-robust aggregation is the composable estimator. Krum
+  scores need pairwise distances over ALL contributions and therefore
+  refuses sparse overlays (``requires_full_graph``).
+
+* **Adversary model** — :class:`AdversarySpec`: a seeded attacker subset
+  of the peers plus an attack kind (``sign_flip`` / ``scaled_noise`` /
+  ``stale_replay``). The host cluster poisons attacker *publishes* (the
+  wire payload every neighbor consumes), composable with the PR-2 churn
+  machinery because both ride the same mailbox; the device path poisons
+  attacker ranks' gradients inside the train step before the exchange
+  collective. ``stale_replay`` re-publishes the attacker's previous
+  epoch's payload and is host-path only (the device step carries no
+  cross-step payload cache).
+
+Breakdown points (fraction of Byzantine peers each estimator survives,
+coordinate-wise unless noted):
+
+==================  =====================================================
+``trimmed_mean:f``  up to ``f`` per end — choose ``f >=`` attacker frac
+``median``          < 1/2
+``krum[:m]``        ``f <= (P - 3) / 2`` (vector-wise, by construction)
+plain mean          0 — one unbounded coordinate destroys the aggregate
+==================  =====================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Bank helpers: a "bank" is a pytree whose leaves are (P, ...) — one row per
+# peer, the shape the device all_gather and the host contribution-stack both
+# produce.
+# ---------------------------------------------------------------------------
+
+
+def bank_peer_norms(bank) -> jnp.ndarray:
+    """Per-peer GLOBAL gradient norm across the whole bank tree: ``(P,)``."""
+    sq = None
+    for leaf in jax.tree.leaves(bank):
+        s = jnp.sum(
+            jnp.asarray(leaf, jnp.float32) ** 2,
+            axis=tuple(range(1, leaf.ndim)),
+        )
+        sq = s if sq is None else sq + s
+    if sq is None:
+        raise ValueError("empty gradient bank")
+    return jnp.sqrt(sq)
+
+
+def clip_bank_to_norm(bank, max_norm) -> Any:
+    """Per-peer gradient-norm clipping: rescale every peer row whose global
+    norm exceeds ``max_norm``. Bounds the damage of one scaled-up
+    contribution *before* the estimator sees it (norm defense composes
+    with any combinator below)."""
+    norms = bank_peer_norms(bank)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norms, 1e-12))
+
+    def leaf(x):
+        s = scale.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
+        return jnp.asarray(x, jnp.float32) * s
+
+    return jax.tree.map(leaf, bank)
+
+
+def clip_bank_to_median_norm(bank) -> Any:
+    """Clip every peer row to the MEDIAN of the per-peer norms — the
+    self-calibrating variant (no magnitude hyperparameter): honest norms
+    concentrate, so the median is an honest-scale estimate as long as
+    attackers are a minority."""
+    return clip_bank_to_norm(bank, jnp.median(bank_peer_norms(bank)))
+
+
+# ---------------------------------------------------------------------------
+# Coordinate-wise order statistics (masked: one code path for full mesh and
+# sparse-graph closed neighborhoods)
+# ---------------------------------------------------------------------------
+
+
+def _mask_like(x, mask):
+    P = x.shape[0]
+    m = jnp.asarray(mask, bool).reshape((P,) + (1,) * (x.ndim - 1))
+    return m
+
+
+def masked_trimmed_mean(x, mask, trim_frac: float):
+    """Coordinate-wise trimmed mean of ``x[(P, ...)]`` over ``mask[(P,)]``.
+
+    Sorts each coordinate across member rows, drops ``floor(trim_frac*k)``
+    values from EACH end (``k`` = member count, trim clamped so at least
+    one value survives), and means the rest. ``trim_frac=0`` on a full
+    mask is the plain mean (float re-association only — matches
+    ``allgather_mean`` to ~1e-6, the safety rail the equivalence tests
+    pin down)."""
+    if not 0.0 <= float(trim_frac) < 0.5:
+        raise ValueError(f"trim_frac must be in [0, 0.5), got {trim_frac}")
+    P = x.shape[0]
+    m = _mask_like(x, mask)
+    k = jnp.sum(jnp.asarray(mask, bool)).astype(jnp.int32)
+    xs = jnp.sort(jnp.where(m, jnp.asarray(x, jnp.float32), jnp.inf), axis=0)
+    t = jnp.floor(trim_frac * k).astype(jnp.int32)
+    t = jnp.minimum(t, (k - 1) // 2)  # keep >= 1 surviving value
+    idx = jnp.arange(P).reshape((P,) + (1,) * (x.ndim - 1))
+    keep = (idx >= t) & (idx < k - t)
+    cnt = jnp.maximum(k - 2 * t, 1).astype(jnp.float32)
+    return jnp.where(keep, xs, 0.0).sum(axis=0) / cnt
+
+
+def masked_median(x, mask):
+    """Coordinate-wise median of ``x[(P, ...)]`` over ``mask[(P,)]`` —
+    even member counts average the two middle values (numpy semantics)."""
+    m = _mask_like(x, mask)
+    k = jnp.sum(jnp.asarray(mask, bool)).astype(jnp.int32)
+    xs = jnp.sort(jnp.where(m, jnp.asarray(x, jnp.float32), jnp.inf), axis=0)
+    lo = lax.dynamic_index_in_dim(xs, (k - 1) // 2, 0, keepdims=False)
+    hi = lax.dynamic_index_in_dim(xs, k // 2, 0, keepdims=False)
+    return 0.5 * (lo + hi)
+
+
+# ---------------------------------------------------------------------------
+# Krum / multi-Krum (vector-wise, full bank)
+# ---------------------------------------------------------------------------
+
+
+def flatten_bank(bank) -> Tuple[jnp.ndarray, Any]:
+    """Bank tree -> ``(P, D)`` matrix + an unflatten closure for one row."""
+    leaves, treedef = jax.tree_util.tree_flatten(bank)
+    P = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [jnp.asarray(l, jnp.float32).reshape(P, -1) for l in leaves], axis=1
+    )
+    shapes = [l.shape[1:] for l in leaves]
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    offsets = np.cumsum([0] + sizes)
+
+    def unflatten(row):
+        outs = [
+            row[offsets[i]: offsets[i + 1]].reshape(shapes[i])
+            for i in range(len(leaves))
+        ]
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
+    return flat, unflatten
+
+
+def krum_scores(flat: jnp.ndarray, f: Optional[int] = None) -> jnp.ndarray:
+    """Krum distance scores over a ``(P, D)`` bank: ``score_i`` = sum of
+    squared distances to ``i``'s ``P - f - 2`` nearest OTHER rows
+    (Blanchard et al., 2017). Lower = more central = more trustworthy.
+
+    ``f`` is the assumed Byzantine count; defaults to the maximum the
+    estimator tolerates, ``floor((P - 3) / 2)``. Distances come from the
+    Gram matrix (``O(P^2 D)`` flops but only ``O(P^2)`` memory), clamped
+    at zero against float cancellation.
+    """
+    P = int(flat.shape[0])
+    if P < 3:
+        raise ValueError(f"krum needs at least 3 peers, got {P}")
+    if f is None:
+        f = (P - 3) // 2
+    f = int(f)
+    if not 0 <= f <= P - 3:
+        raise ValueError(f"krum assumed attacker count f={f} outside [0, {P - 3}]")
+    sqn = jnp.sum(flat * flat, axis=1)
+    d2 = jnp.maximum(sqn[:, None] + sqn[None, :] - 2.0 * flat @ flat.T, 0.0)
+    d2 = d2 + jnp.diag(jnp.full((P,), jnp.inf, jnp.float32))  # exclude self
+    near = P - f - 2  # >= 1 by the f bound above
+    return jnp.sort(d2, axis=1)[:, :near].sum(axis=1)
+
+
+def krum_select(
+    flat: jnp.ndarray, *, m: int = 1, f: Optional[int] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Multi-Krum: average the ``m`` lowest-scored rows of ``(P, D)``.
+
+    Returns ``(aggregate (D,), selected row indices (m,))``; ``m=1`` is
+    classic Krum (the single most central gradient).
+    """
+    P = int(flat.shape[0])
+    m = int(m)
+    if not 1 <= m <= P:
+        raise ValueError(f"krum selection count m={m} outside [1, {P}]")
+    scores = krum_scores(flat, f)
+    sel = jnp.argsort(scores)[:m]
+    return jnp.take(flat, sel, axis=0).mean(axis=0), sel
+
+
+# ---------------------------------------------------------------------------
+# Adversary model
+# ---------------------------------------------------------------------------
+
+ATTACK_KINDS = ("sign_flip", "scaled_noise", "stale_replay")
+
+
+@dataclass(frozen=True)
+class AdversarySpec:
+    """A seeded Byzantine attacker set + the attack its members mount.
+
+    ``fraction`` of the peers (or an explicit ``num``) are attackers,
+    chosen uniformly without replacement from ``seed`` — so a fixed seed
+    fixes WHICH peers are malicious across protocols/graphs in a sweep,
+    isolating the estimator as the only variable. Attack kinds:
+
+    * ``sign_flip`` — publish ``-scale x`` the honest gradient (the
+      classic reverse-the-update poisoning).
+    * ``scaled_noise`` — publish ``scale x N(0, 1)`` noise of the honest
+      gradient's shape (seeded per peer x epoch).
+    * ``stale_replay`` — re-publish the attacker's previous epoch's wire
+      payload verbatim (epoch 0 has nothing to replay and publishes
+      honestly). Host path only: it replays the *encoded payload*, which
+      exists only on the mailbox path.
+
+    Composable with churn: both ride :class:`LocalP2PCluster`'s publish
+    path, so a churned-out attacker's stale poisoned register keeps being
+    consumed — exactly the failure mode robust estimators must absorb.
+    """
+
+    fraction: float = 0.0
+    num: Optional[int] = None  # explicit attacker count, overrides fraction
+    attack: str = "sign_flip"
+    scale: float = 10.0  # sign-flip / noise magnitude multiplier
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.attack not in ATTACK_KINDS:
+            raise ValueError(
+                f"unknown attack {self.attack!r}; kinds: {', '.join(ATTACK_KINDS)}"
+            )
+        if not 0.0 <= self.fraction <= 1.0:
+            raise ValueError(f"fraction must be in [0, 1], got {self.fraction}")
+        if self.num is not None and self.num < 0:
+            raise ValueError(f"num must be >= 0, got {self.num}")
+
+    def num_attackers(self, num_peers: int) -> int:
+        if self.num is not None:
+            return min(int(self.num), int(num_peers))
+        return int(round(self.fraction * num_peers))
+
+    def attackers(self, num_peers: int) -> Tuple[int, ...]:
+        """The seeded attacker ranks, ascending."""
+        n = self.num_attackers(num_peers)
+        if n == 0:
+            return ()
+        rng = np.random.default_rng(self.seed)
+        return tuple(
+            sorted(int(r) for r in rng.choice(num_peers, size=n, replace=False))
+        )
+
+    def is_attacker(self, rank: int, num_peers: int) -> bool:
+        return rank in self.attackers(num_peers)
+
+    def mask(self, num_peers: int) -> np.ndarray:
+        """(P,) bool — True at attacker ranks."""
+        m = np.zeros(num_peers, dtype=bool)
+        for r in self.attackers(num_peers):
+            m[r] = True
+        return m
+
+    @property
+    def active(self) -> bool:
+        return self.num is not None and self.num > 0 or self.fraction > 0.0
+
+    def describe(self) -> str:
+        return (
+            f"adversary({self.attack}, "
+            f"{'num=' + str(self.num) if self.num is not None else f'frac={self.fraction:g}'}"
+            f", scale={self.scale:g}, seed={self.seed})"
+        )
+
+
+def poison_gradients(grads, spec: AdversarySpec, key):
+    """One attacker's poisoned gradient under ``sign_flip``/``scaled_noise``.
+
+    Pure and path-agnostic: the host cluster poisons before encoding, the
+    device step applies it under a rank predicate inside the manual
+    region. ``stale_replay`` is payload-level and handled by the
+    cluster's publish cache (this function refuses it)."""
+    if spec.attack == "sign_flip":
+        return jax.tree.map(
+            lambda g: -spec.scale * jnp.asarray(g, jnp.float32), grads
+        )
+    if spec.attack == "scaled_noise":
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        keys = jax.random.split(key, len(leaves))
+        return jax.tree_util.tree_unflatten(
+            treedef,
+            [
+                spec.scale * jax.random.normal(k, g.shape, jnp.float32)
+                for g, k in zip(leaves, keys)
+            ],
+        )
+    raise ValueError(
+        f"attack {spec.attack!r} is payload-level (host mailbox path only) "
+        "and cannot be expressed as a gradient transform"
+    )
+
+
+def tree_all_finite(tree) -> bool:
+    """Host-side non-finite check: True iff every leaf is finite everywhere."""
+    return all(
+        bool(jnp.all(jnp.isfinite(jnp.asarray(leaf, jnp.float32))))
+        for leaf in jax.tree.leaves(tree)
+    )

@@ -39,6 +39,7 @@ from repro.core.events import EventEngine, LinkModel
 from repro.core.exchange import ExchangeContext, ExchangeProtocol, get_exchange
 from repro.core.graph import PeerGraph, get_graph
 from repro.core.mailbox import HostMailbox
+from repro.core.robust import AdversarySpec, poison_gradients, tree_all_finite
 from repro.core.serverless import ExecutionReport, ServerlessExecutor
 from repro.data import DataLoader, Dataset, Partitioner, BatchKey
 from repro.metrics import StageMetrics
@@ -97,6 +98,12 @@ class LocalP2PCluster:
         peer_speeds: Optional[Sequence[float]] = None,
         churn_prob: float = 0.0,  # async: P(peer drops mid-step), per attempt
         churn_downtime_s: float = 1.0,  # async: rejoin delay after a drop
+        adversary: Optional[AdversarySpec] = None,  # Byzantine attacker model
+        reject_nonfinite: bool = False,  # drop NaN/Inf contributions at consume
+        trim_frac: float = 0.0,  # trimmed_mean default (spec param overrides)
+        krum_m: int = 1,  # multi-Krum default (spec param overrides)
+        krum_f: Optional[int] = None,  # Krum's assumed Byzantine count
+        robust_clip: float = 0.0,  # per-contribution norm clip, 0 = off
         seed: int = 0,
     ):
         import dataclasses as _dc
@@ -154,9 +161,31 @@ class LocalP2PCluster:
                 "only runs in sync mode; use exchange='async' for "
                 "asynchronous epochs"
             )
+        # Adversary model: a seeded subset of peers publishes poisoned (or
+        # stale-replayed) payloads through the SAME publish path honest
+        # peers use — composable with churn, graphs and every wire codec.
+        self.adversary = adversary
+        self._attackers = (
+            frozenset(adversary.attackers(num_peers))
+            if adversary is not None else frozenset()
+        )
+        if self._attackers and self.protocol.sharded:
+            raise ValueError(
+                f"exchange protocol {self.protocol.name!r} exchanges "
+                "shard pieces, not whole-gradient payloads; the adversary "
+                "model poisons whole-gradient publishes — use a dense "
+                "protocol (allgather_mean / trimmed_mean / median / krum)"
+            )
+        self._poison_key = jax.random.PRNGKey(
+            adversary.seed if adversary is not None else 0
+        )
+        self._replay_cache: Dict[int, Tuple[Any, int]] = {}  # stale_replay
+        self.reject_nonfinite = reject_nonfinite
         self.xctx = ExchangeContext(
             num_peers=num_peers, qsgd=qsgd, topk_frac=topk_frac,
             graph=self.graph, mixing=self._mixing,
+            trim_frac=trim_frac, krum_m=krum_m, krum_f=krum_f,
+            robust_clip=robust_clip,
         )
         self.bw = network_bandwidth_bps
         self.link = LinkModel(bandwidth_bps=network_bandwidth_bps)
@@ -286,17 +315,39 @@ class LocalP2PCluster:
         return g, loss, acc, compute_wall
 
     def _publish(self, peer: PeerState, grads, epoch: int, at_time: float):
-        """SendGradientsToMyQueue via the exchange protocol's wire format."""
+        """SendGradientsToMyQueue via the exchange protocol's wire format.
+
+        Byzantine peers poison HERE — the publish is the wire, so every
+        neighbor (and only neighbors) consumes the poisoned payload while
+        the attacker's own local gradient stays honest. ``sign_flip`` /
+        ``scaled_noise`` transform the gradient before encoding (composes
+        with any codec); ``stale_replay`` re-publishes the attacker's
+        previous epoch's encoded payload verbatim.
+        """
+        poisoned = False
+        if peer.rank in self._attackers and self.adversary.attack != "stale_replay":
+            pk = jax.random.fold_in(
+                jax.random.fold_in(self._poison_key, epoch), peer.rank
+            )
+            grads = poison_gradients(grads, self.adversary, pk)
+            poisoned = True
         with peer.metrics.stage("send_gradients"):
             key = None
             if self.protocol.requires_key:
                 self.key, key = jax.random.split(self.key)
             payload, nbytes = self.protocol.host_encode(grads, self.xctx, key=key)
+            if peer.rank in self._attackers and self.adversary.attack == "stale_replay":
+                replayed = self._replay_cache.get(peer.rank)
+                self._replay_cache[peer.rank] = (payload, nbytes)
+                if replayed is not None:
+                    payload, nbytes = replayed  # epoch e ships epoch e-1's wire
+                    poisoned = True
             msg = (self.protocol.name, payload)
             jax.block_until_ready(jax.tree.leaves(payload))
             wire_s = self.link.transfer_s(nbytes)
             self.mailbox.publish(
-                peer.rank, msg, nbytes=nbytes, time=at_time + wire_s, epoch=epoch
+                peer.rank, msg, nbytes=nbytes, time=at_time + wire_s, epoch=epoch,
+                poisoned=poisoned,
             )
         peer.comm_bytes_sent += nbytes
         peer.send_time_s += wire_s
@@ -323,16 +374,23 @@ class LocalP2PCluster:
                 if msg is None:
                     continue  # async: nothing published yet -> skip
                 _, payload = msg.payload
-                grads_peers[other] = self.protocol.host_decode(
-                    payload, own_grads, self.xctx
-                )
+                decoded = self.protocol.host_decode(payload, own_grads, self.xctx)
                 wire_s = self.mailbox.download_time_s(msg, link=self.link)
                 peer.recv_time_s += wire_s
                 recv_wire_s += wire_s
+                if self.reject_nonfinite and not tree_all_finite(decoded):
+                    # The bytes still crossed the wire (charged above); the
+                    # contribution is dropped at the trust boundary.
+                    self.mailbox.stats["rejected_nonfinite"] += 1
+                    continue
+                grads_peers[other] = decoded
         return grads_peers, recv_wire_s
 
     def _update(self, peer: PeerState, grads_peers: Dict[int, Any], lr: float):
         """Mix the consumed gradients and step the peer's optimizer.
+
+        Robust protocols (trimmed mean / median / Krum) take over the whole
+        combine via :meth:`ExchangeProtocol.host_combine`; otherwise:
 
         Full graph: plain mean over contributions (legacy, bit-exact).
         Sparse graph: Metropolis–Hastings weights ``W[r]``, renormalized
@@ -340,6 +398,10 @@ class LocalP2PCluster:
         (or churned-out) neighbor doesn't shrink the update.
         """
         with peer.metrics.stage("model_update"):
+            robust = self.protocol.host_combine(grads_peers, peer.rank, self.xctx)
+            if robust is not None:
+                self._apply_avg(peer, robust, lr)
+                return
             if self._mixing is None:
                 n = len(grads_peers)
                 avg = jax.tree.map(

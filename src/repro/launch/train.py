@@ -23,8 +23,9 @@ from repro.core.compression import QSGDConfig
 from repro.core.convergence import ConvergenceDetector
 from repro.core.cost import EC2_MEMORY_MB
 from repro.core.events import InstanceConfig, RuntimeConfig, available_allocations
-from repro.core.exchange import available_exchanges
+from repro.core.exchange import available_exchanges, get_exchange
 from repro.core.p2p import Topology
+from repro.core.robust import ATTACK_KINDS, AdversarySpec
 from repro.data import BatchKey, DataLoader, Partitioner, make_dataset
 from repro.launch.mesh import make_host_mesh
 from repro.launch.sharding import activation_rules
@@ -54,7 +55,9 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--optimizer", default="adam", choices=["adam", "sgd"])
     ap.add_argument("--exchange", default="allgather_mean",
-                    choices=list(available_exchanges()))
+                    help="exchange protocol, optionally parameterized "
+                         "NAME[:ARG] (e.g. trimmed_mean:0.25, krum:2); "
+                         f"names: {', '.join(available_exchanges())}")
     ap.add_argument("--graph", default="full",
                     help="peer overlay graph: full | ring | gossip:K | "
                          "hierarchical[:GROUP] (see repro.core.graph)")
@@ -64,6 +67,27 @@ def main(argv=None):
                     help="async: consume banks published K steps ago")
     ap.add_argument("--topk-frac", type=float, default=0.01,
                     help="topk: fraction of gradient entries shipped")
+    # robust aggregation + adversary model (repro.core.robust)
+    ap.add_argument("--trim-frac", type=float, default=0.0,
+                    help="trimmed_mean: fraction trimmed from EACH end "
+                         "(spec param trimmed_mean:F overrides)")
+    ap.add_argument("--krum-m", type=int, default=1,
+                    help="krum: multi-Krum m, averages the m lowest-scored "
+                         "peers (spec param krum:M overrides)")
+    ap.add_argument("--robust-clip", type=float, default=0.0,
+                    help="robust protocols: clip each peer's contribution "
+                         "to this global norm before aggregation (0 = off)")
+    ap.add_argument("--adversary-frac", type=float, default=0.0,
+                    help="fraction of peers that publish poisoned gradients")
+    ap.add_argument("--adversary-num", type=int, default=None,
+                    help="exact Byzantine peer count (overrides --adversary-frac)")
+    ap.add_argument("--attack", default="sign_flip", choices=list(ATTACK_KINDS),
+                    help="poison applied by Byzantine peers (stale_replay is "
+                         "host-cluster only)")
+    ap.add_argument("--adversary-scale", type=float, default=10.0,
+                    help="attack magnitude (sign-flip multiplier / noise std)")
+    ap.add_argument("--adversary-seed", type=int, default=0,
+                    help="seed selecting WHICH peers are Byzantine")
     ap.add_argument("--data-parallel", type=int, default=None)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--checkpoint", default=None)
@@ -127,6 +151,16 @@ def main(argv=None):
     if inst_overrides:
         instance_cfg = _dc.replace(instance_cfg, **inst_overrides)
 
+    get_exchange(args.exchange)  # fail fast on unknown/invalid NAME[:ARG]
+
+    adversary = None
+    if args.adversary_frac > 0 or args.adversary_num:
+        adversary = AdversarySpec(
+            fraction=args.adversary_frac, num=args.adversary_num,
+            attack=args.attack, scale=args.adversary_scale,
+            seed=args.adversary_seed,
+        )
+
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg, vocab_size=512)
@@ -143,6 +177,9 @@ def main(argv=None):
         qsgd=QSGDConfig(levels=127, bucket=512) if args.exchange == "qsgd" else None,
         staleness=args.staleness,
         topk_frac=args.topk_frac,
+        trim_frac=args.trim_frac,
+        krum_m=args.krum_m,
+        robust_clip=args.robust_clip,
         serverless=mesh.shape["model"] > 1,
     )
     opt = adam() if args.optimizer == "adam" else sgd(momentum=0.9)
@@ -150,7 +187,10 @@ def main(argv=None):
     trainer = P2PTrainer(cfg, opt, topo, mesh, sched,
                          runtime=runtime, allocation=args.allocation,
                          backend=args.backend, instance_type=args.instance_type,
-                         instance_config=instance_cfg)
+                         instance_config=instance_cfg, adversary=adversary)
+    if adversary is not None:
+        print(f"adversary: {adversary.describe()} "
+              f"(attackers={sorted(adversary.attackers(npeers))})")
     state = trainer.init_state(jax.random.PRNGKey(0))
     if args.restore:
         state = trainer.restore(args.restore, state)

@@ -36,6 +36,7 @@ from repro.core.p2p import (
     build_p2p_train_step,
     exchange_context,
 )
+from repro.core.robust import AdversarySpec
 from repro.core.serverless import ExecutionReport, ServerlessExecutor
 from repro.core.shard import ShardPlan
 from repro.optim import Optimizer
@@ -64,6 +65,7 @@ class P2PTrainer:
         backend: str = "serverless",  # which accounting model `account()` prices
         instance_type: str = "t2.large",  # EC2 tier of the instance baseline
         instance_config: Optional[InstanceConfig] = None,  # boot/churn model
+        adversary: Optional[AdversarySpec] = None,  # Byzantine peers on the mesh
     ):
         import dataclasses as _dc
 
@@ -93,7 +95,10 @@ class P2PTrainer:
                 use_ssd_kernel=use_ssd_kernel,
             )
         self.loss_fn = loss_fn
-        self.step_fn = build_p2p_train_step(loss_fn, optimizer, topo, mesh, schedule)
+        self.adversary = adversary
+        self.step_fn = build_p2p_train_step(
+            loss_fn, optimizer, topo, mesh, schedule, adversary=adversary
+        )
         self._step = jax.jit(self.step_fn) if jit else self.step_fn
 
     @property

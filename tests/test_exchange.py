@@ -28,12 +28,30 @@ def test_registry_enumerates_all_protocols():
     names = available_exchanges()
     assert {
         "allgather_mean", "psum_mean", "qsgd", "topk", "async",
-        "reduce_scatter",
+        "reduce_scatter", "trimmed_mean", "median", "krum",
     } <= set(names)
     for n in names:
         proto = get_exchange(n)
         assert isinstance(proto, ExchangeProtocol)
         assert proto.name == n
+
+
+def test_parameterized_exchange_specs():
+    # NAME:ARG mirrors the graph registry's gossip:K idiom
+    assert get_exchange("trimmed_mean:0.25").frac == 0.25
+    assert get_exchange("trimmed_mean").frac is None  # falls back to ctx
+    assert get_exchange("krum:2").m == 2
+    with pytest.raises(ValueError, match=r"\[0, 0.5\)"):
+        get_exchange("trimmed_mean:0.7")
+    with pytest.raises(ValueError, match=">= 1"):
+        get_exchange("krum:0")
+    with pytest.raises(ValueError, match="does not take"):
+        get_exchange("allgather_mean:3")
+    with pytest.raises(ValueError, match="unknown exchange protocol"):
+        get_exchange("nope:1")
+    # krum's pairwise distances need every contribution
+    assert get_exchange("krum").requires_full_graph
+    assert not get_exchange("median").requires_full_graph
 
 
 def test_unknown_exchange_raises_helpful_error():
@@ -220,6 +238,8 @@ def test_sync_protocols_match_reference_mean_multidevice():
             ("reduce_scatter", {}, 1e-6),  # sharded ring, same mean
             ("topk", {"topk_frac": 1.0}, 1e-6),  # k=n: lossless
             ("qsgd", {"qsgd": QSGDConfig(levels=127, bucket=64)}, 0.5),
+            ("trimmed_mean:0", {}, 1e-6),  # zero trim IS the mean
+            ("trimmed_mean", {}, 1e-6),  # ctx default trim_frac=0.0
         ]:
             avg = run(name, **kw)
             err = max(
@@ -233,6 +253,31 @@ def test_sync_protocols_match_reference_mean_multidevice():
         sparse = run("topk", topk_frac=0.25)
         err = float(jnp.abs(sparse["w"] - ref["w"]).max())
         assert err > 0, "frac<1 must be lossy on dense gradients"
+
+        # coordinate median == numpy median over the peer axis
+        med = run("median")
+        med_ref = jax.tree.map(lambda x: jnp.median(x, axis=0), g_global)
+        err = max(
+            float(jnp.abs(a - b).max())
+            for a, b in zip(jax.tree.leaves(med), jax.tree.leaves(med_ref))
+        )
+        assert err <= 1e-6, ("median", err)
+
+        # krum picks the row with the lowest summed distance to its
+        # P - f - 2 nearest peers (f defaults to (P-3)//2 = 0 at P=4)
+        flat = np.concatenate(
+            [np.asarray(g_global[k]).reshape(4, -1) for k in ("w", "b")], 1
+        )
+        d2 = ((flat[:, None, :] - flat[None, :, :]) ** 2).sum(-1)
+        np.fill_diagonal(d2, np.inf)
+        scores = np.sort(d2, axis=1)[:, :2].sum(1)
+        kref = flat[int(np.argmin(scores))]
+        kr = run("krum")
+        kflat = np.concatenate(
+            [np.asarray(kr[k]).reshape(-1) for k in ("w", "b")]
+        )
+        err = float(np.abs(kflat - kref).max())
+        assert err <= 1e-5, ("krum", err)
         print("OK")
         """
     )

@@ -1,0 +1,88 @@
+"""StageMetrics / StageProbe (metrics/resources.py): probe measurement,
+nesting, simulated stages, mean/table invariants."""
+import time
+
+import pytest
+
+from repro.metrics.resources import StageMetrics, StageProbe, StageRecord
+
+
+def test_probe_records_elapsed_time():
+    m = StageMetrics()
+    with m.stage("compute_gradients"):
+        time.sleep(0.01)
+    recs = m.records["compute_gradients"]
+    assert len(recs) == 1
+    assert recs[0].seconds >= 0.01
+    assert recs[0].mem_mb >= 0.0
+
+
+def test_probe_nesting_attributes_both_stages():
+    m = StageMetrics()
+    with m.stage("send_gradients"):
+        time.sleep(0.005)
+        with m.stage("receive_gradients"):
+            time.sleep(0.005)
+    outer = m.records["send_gradients"][0]
+    inner = m.records["receive_gradients"][0]
+    # the inner probe's wall time is contained in the outer's
+    assert outer.seconds >= inner.seconds
+    assert inner.seconds >= 0.005
+
+
+def test_probe_swallows_nothing_on_exception():
+    m = StageMetrics()
+    with pytest.raises(RuntimeError):
+        with m.stage("model_update"):
+            raise RuntimeError("boom")
+    # the record is still written (context manager returns False)
+    assert len(m.records["model_update"]) == 1
+
+
+def test_add_simulated_zero_cpu_memory():
+    m = StageMetrics()
+    m.add_simulated("cold_start", 2.5)
+    m.add_simulated("cold_start", 1.5)
+    mean = m.mean("cold_start")
+    assert mean.seconds == pytest.approx(2.0)
+    assert mean.cpu_percent == 0.0 and mean.mem_mb == 0.0
+
+
+def test_mean_of_empty_stage_is_zero_record():
+    m = StageMetrics()
+    mean = m.mean("receive_gradients")
+    assert (mean.seconds, mean.cpu_percent, mean.mem_mb, mean.rss_mb) == (
+        0.0, 0.0, 0.0, 0.0,
+    )
+
+
+def test_mean_averages_all_fields():
+    m = StageMetrics()
+    m.add("model_update", StageRecord(1.0, 10.0, 100.0, 200.0))
+    m.add("model_update", StageRecord(3.0, 30.0, 300.0, 400.0))
+    mean = m.mean("model_update")
+    assert mean.seconds == 2.0
+    assert mean.cpu_percent == 20.0
+    assert mean.mem_mb == 200.0
+    assert mean.rss_mb == 300.0
+
+
+def test_table_covers_all_stages_and_memory_is_max():
+    m = StageMetrics()
+    m.add("compute_gradients", StageRecord(0.5, 50.0, 10.0, 99.0))
+    m.add_simulated("queue_wait", 0.25)
+    t = m.table()
+    # every Table-I stage plus the engine-simulated ones, measured or not
+    assert set(t) == set(StageMetrics.STAGES + StageMetrics.SIM_STAGES)
+    row = t["compute_gradients"]
+    assert row["time_s"] == 0.5
+    assert row["memory_mb"] == 99.0  # max(tracemalloc peak, RSS)
+    assert t["queue_wait"]["time_s"] == 0.25
+    assert t["model_update"]["time_s"] == 0.0  # unmeasured -> zeros
+
+
+def test_stage_returns_probe_for_this_metrics():
+    m = StageMetrics()
+    probe = m.stage("convergence_detection")
+    assert isinstance(probe, StageProbe)
+    assert probe.metrics is m and probe.stage == "convergence_detection"
