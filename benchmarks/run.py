@@ -30,6 +30,7 @@ def main() -> None:
         fig9_sharded_aggregation,
         fig10_cost_time_frontier,
         fig12_byzantine,
+        fig13_fused_compression,
         roofline,
         table1_resource_stages,
         table2_3_cost,
@@ -48,6 +49,7 @@ def main() -> None:
         "fig9": fig9_sharded_aggregation,
         "fig10": fig10_cost_time_frontier,
         "fig12": fig12_byzantine,
+        "fig13": fig13_fused_compression,
         "roofline": roofline,
     }
     if args.only:

@@ -38,6 +38,10 @@ for n in available_graphs():
   # fast rails only (equivalence, wire accounting, adversary bookkeeping);
   # the full attack sweep is `python -m benchmarks.run --only fig12`
   python -m benchmarks.fig12_byzantine --smoke
+  echo "== smoke: fused compressed exchange + EF rails (Fig. 13) =="
+  # fast rails only (kernel==jnp equivalence, wire accounting, EF finite);
+  # the full retention/timing run is `python -m benchmarks.run --only fig13`
+  python -m benchmarks.fig13_fused_compression --smoke
   echo "== smoke: docs link check =="
   python scripts/check_links.py
 }

@@ -100,6 +100,27 @@ def qsgd_dequantize_ref(
     return levels.astype(jnp.float32) * (norms[:, None] / s)
 
 
+def dequant_reduce(
+    levels: jnp.ndarray,  # (P, nb, bucket) int8 — gathered peer banks
+    norms: jnp.ndarray,  # (P, nb) f32
+    w: jnp.ndarray,  # (P,) f32 mixing weights (uniform 1/P on the full graph)
+    cfg: QSGDConfig,
+) -> jnp.ndarray:
+    """Fused decode: ``sum_p w[p] * dequantize(levels[p], norms[p])``.
+
+    ``impl="kernel"`` runs the single-pass Pallas kernel
+    (``repro.kernels.qsgd._dequant_reduce_kernel``); ``impl="jnp"`` is the
+    reduce-after-dequantize formulation (same math, reference path).
+    Returns (nb, bucket) f32.
+    """
+    if cfg.impl == "kernel":
+        from repro.kernels import ops as kops
+
+        return kops.qsgd_dequant_reduce(levels, norms, w, cfg.levels)
+    deq = levels.astype(jnp.float32) * (norms.astype(jnp.float32) / cfg.levels)[..., None]
+    return jnp.tensordot(w.astype(jnp.float32), deq, axes=(0, 0))
+
+
 # ---------------------------------------------------------------------------
 # pytree API
 # ---------------------------------------------------------------------------

@@ -76,6 +76,7 @@ class ExchangeContext:
     wire_dtype: Any = jnp.float32
     qsgd: Optional[C.QSGDConfig] = None
     topk_frac: float = 0.01
+    topk_impl: str = "jnp"  # "jnp" (lax.top_k oracle) | "kernel" (Pallas)
     staleness: int = 1
     graph: Any = None  # resolved repro.core.graph.PeerGraph, or None
     mixing: Any = None  # (P, P) fp32 MH matrix; None => uniform 1/P (full)
@@ -121,6 +122,7 @@ class ExchangeProtocol(abc.ABC):
     decomposes_per_edge: ClassVar[bool] = True  # False: fused collective
     requires_full_graph: ClassVar[bool] = False  # True: refuses sparse overlays
     sharded: ClassVar[bool] = False  # True: shards, not pytrees, on the wire
+    lossy: ClassVar[bool] = False  # True: codec drops information (EF applies)
 
     # -- device path --------------------------------------------------------
     def init_state(self, grads_like, ctx: ExchangeContext):
@@ -134,6 +136,19 @@ class ExchangeProtocol(abc.ABC):
         Runs inside the manual region; sync protocols pass ``state``
         through untouched.
         """
+
+    def combine_ef(self, grads, ctx: ExchangeContext, *, key=None, state=None):
+        """Error-feedback variant: -> (averaged, local_image, new_state).
+
+        ``local_image`` is the decoded image of THIS peer's shipped
+        contribution — what the rest of the swarm actually received from
+        us. EF-SGD accumulates ``residual = grads - local_image`` and adds
+        it back before the next encode. Lossless protocols ship ``grads``
+        verbatim, so the default keeps the residual identically zero;
+        lossy codecs (qsgd, topk) override.
+        """
+        avg, state = self.combine(grads, ctx, key=key, state=state)
+        return avg, grads, state
 
     # -- host path -----------------------------------------------------------
     def host_encode(self, grads, ctx: ExchangeContext, *, key=None):
@@ -317,11 +332,17 @@ class QSGDExchange(ExchangeProtocol):
     """
 
     requires_key = True
+    lossy = True
 
     def _cfg(self, ctx) -> C.QSGDConfig:
         return ctx.qsgd or C.QSGDConfig()
 
-    def combine(self, grads, ctx, *, key=None, state=None):
+    def _combine(self, grads, ctx, *, key, want_local: bool):
+        """Shared device path. The decode side is the FUSED formulation
+        ``dequant_reduce`` (one pass over all P gathered int8 banks,
+        mixing-weighted) — Pallas kernel when ``cfg.impl == "kernel"``,
+        jnp reference otherwise. Returns (avg, local_image-or-None).
+        """
         qcfg = self._cfg(ctx)
         if key is None:
             raise ValueError("qsgd exchange requires an rng key")
@@ -330,24 +351,34 @@ class QSGDExchange(ExchangeProtocol):
         w = None if ctx.mixing is None else ctx.mix_row()[0]
 
         def leaf(g, k):
-            payload = C.quantize(g, k, qcfg)
+            payload = C.quantize(g, k, qcfg)  # routes cfg.impl for encode
             lev = lax.all_gather(payload["levels"], ctx.axis)  # (P, nb, B)
             nrm = lax.all_gather(payload["norms"], ctx.axis)  # (P, nb)
-            deq = jax.vmap(lambda l, n: C.qsgd_dequantize_ref(l, n, qcfg.levels))(
-                lev, nrm
-            )
-            if w is None:
-                flat = deq.mean(axis=0).reshape(-1)
-            else:
-                flat = jnp.tensordot(w, deq, axes=(0, 0)).reshape(-1)
-            return flat[: g.size].reshape(g.shape)
+            P_ = lev.shape[0]
+            wrow = jnp.full((P_,), 1.0 / P_, jnp.float32) if w is None else w
+            flat = C.dequant_reduce(lev, nrm, wrow, qcfg).reshape(-1)
+            avg = flat[: g.size].reshape(g.shape)
+            if not want_local:
+                return avg, None
+            local = C.dequantize(payload, qcfg).reshape(g.shape)
+            return avg, local
 
         leaves, treedef = jax.tree_util.tree_flatten(grads)
         keys = jax.random.split(key, len(leaves))
-        avg = jax.tree_util.tree_unflatten(
-            treedef, [leaf(g, k) for g, k in zip(leaves, keys)]
-        )
+        pairs = [leaf(g, k) for g, k in zip(leaves, keys)]
+        avg = jax.tree_util.tree_unflatten(treedef, [p[0] for p in pairs])
+        if not want_local:
+            return avg, None
+        local = jax.tree_util.tree_unflatten(treedef, [p[1] for p in pairs])
+        return avg, local
+
+    def combine(self, grads, ctx, *, key=None, state=None):
+        avg, _ = self._combine(grads, ctx, key=key, want_local=False)
         return avg, state
+
+    def combine_ef(self, grads, ctx, *, key=None, state=None):
+        avg, local = self._combine(grads, ctx, key=key, want_local=True)
+        return avg, local, state
 
     def host_encode(self, grads, ctx, *, key=None):
         if key is None:
@@ -374,33 +405,83 @@ class TopKExchange(ExchangeProtocol):
     largest-magnitude gradient entries (values + int32 indices); receivers
     scatter-add and average. Deterministic, biased towards large
     coordinates — the registry's proof-of-extension protocol.
+
+    ``ctx.topk_impl`` picks the select/scatter implementation:
+    ``"jnp"`` is the ``lax.top_k`` + ``.at[].add`` oracle; ``"kernel"``
+    runs the Pallas bisection-threshold select+pack encoder and the fused
+    scatter-accumulate decoder (``repro.kernels.topk``). On exact
+    magnitude ties at the k-th position the two may pick different (equal
+    magnitude) coordinates; otherwise they select identically.
     """
+
+    lossy = True
 
     @staticmethod
     def _k(n: int, frac: float) -> int:
         return max(1, min(n, int(round(n * frac))))
 
-    def combine(self, grads, ctx, *, key=None, state=None):
+    @staticmethod
+    def _select(flat, k: int, ctx):
+        """(k,) f32 values + (k,) int32 indices of the k largest |flat|."""
+        from repro.kernels import ops as kops
+        from repro.kernels import ref as kref
+
+        if ctx.topk_impl == "kernel":
+            return kops.topk_select_pack(flat, k)
+        return kref.topk_select_ref(flat, k)
+
+    @staticmethod
+    def _scatter(vbank, ibank, wrow, n: int, ctx):
+        """Fused sparse decode-reduce: (P, k) banks -> weighted dense (n,)."""
+        from repro.kernels import ops as kops
+        from repro.kernels import ref as kref
+
+        if ctx.topk_impl == "kernel":
+            return kops.topk_scatter_accum(vbank, ibank, wrow, n)
+        return kref.topk_scatter_ref(vbank, ibank, wrow, n)
+
+    def _combine(self, grads, ctx, *, want_local: bool):
         frac = ctx.topk_frac
         w = None if ctx.mixing is None else ctx.mix_row()[0]
 
         def leaf(g):
             flat = g.astype(jnp.float32).reshape(-1)
             k = self._k(flat.size, frac)
-            _, idx = lax.top_k(jnp.abs(flat), k)
-            vals = jnp.take(flat, idx)
+            vals, idx = self._select(flat, k, ctx)
             vbank = lax.all_gather(vals.astype(ctx.wire_dtype), ctx.axis)  # (P, k)
             ibank = lax.all_gather(idx, ctx.axis)  # (P, k)
-            vdense = vbank.astype(jnp.float32)
-            if w is None:
-                vdense = vdense / vbank.shape[0]
-            else:
-                vdense = vdense * w[:, None]  # neighbor-weighted scatter-add
-            dense = jnp.zeros((flat.size,), jnp.float32)
-            dense = dense.at[ibank.reshape(-1)].add(vdense.reshape(-1))
-            return dense.reshape(g.shape)
+            P_ = vbank.shape[0]
+            wrow = jnp.full((P_,), 1.0 / P_, jnp.float32) if w is None else w
+            dense = self._scatter(
+                vbank.astype(jnp.float32), ibank, wrow, flat.size, ctx
+            )
+            avg = dense.reshape(g.shape)
+            if not want_local:
+                return avg, None
+            local = self._scatter(
+                vals[None].astype(jnp.float32),
+                idx[None],
+                jnp.ones((1,), jnp.float32),
+                flat.size,
+                ctx,
+            ).reshape(g.shape)
+            return avg, local
 
-        return jax.tree.map(leaf, grads), state
+        leaves, treedef = jax.tree_util.tree_flatten(grads)
+        pairs = [leaf(g) for g in leaves]
+        avg = jax.tree_util.tree_unflatten(treedef, [p[0] for p in pairs])
+        if not want_local:
+            return avg, None
+        local = jax.tree_util.tree_unflatten(treedef, [p[1] for p in pairs])
+        return avg, local
+
+    def combine(self, grads, ctx, *, key=None, state=None):
+        avg, _ = self._combine(grads, ctx, want_local=False)
+        return avg, state
+
+    def combine_ef(self, grads, ctx, *, key=None, state=None):
+        avg, local = self._combine(grads, ctx, want_local=True)
+        return avg, local, state
 
     def host_encode(self, grads, ctx, *, key=None):
         frac = ctx.topk_frac
@@ -410,10 +491,13 @@ class TopKExchange(ExchangeProtocol):
         for g in jax.tree.leaves(grads):
             flat = jnp.asarray(g, jnp.float32).reshape(-1)
             k = self._k(flat.size, frac)
-            _, idx = lax.top_k(jnp.abs(flat), k)
-            vals = jnp.take(flat, idx).astype(ctx.wire_dtype)
+            vals, idx = self._select(flat, k, ctx)
             payload.append(
-                {"values": vals, "idx": idx, "shape": np.asarray(g.shape, np.int64)}
+                {
+                    "values": vals.astype(ctx.wire_dtype),
+                    "idx": idx,
+                    "shape": np.asarray(g.shape, np.int64),
+                }
             )
             nbytes += k * (itemsize + 4)
         treedef = jax.tree_util.tree_structure(grads)
@@ -422,8 +506,13 @@ class TopKExchange(ExchangeProtocol):
     def host_decode(self, payload, grads_like, ctx):
         def leaf(p, g):
             n = int(np.prod(p["shape"])) if len(p["shape"]) else 1
-            dense = jnp.zeros((n,), jnp.float32)
-            dense = dense.at[p["idx"]].add(p["values"].astype(jnp.float32))
+            dense = self._scatter(
+                p["values"].astype(jnp.float32)[None],
+                jnp.asarray(p["idx"])[None],
+                jnp.ones((1,), jnp.float32),
+                n,
+                ctx,
+            )
             return dense.reshape(tuple(int(d) for d in p["shape"]))
 
         is_payload = lambda x: isinstance(x, dict) and "values" in x

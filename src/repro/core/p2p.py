@@ -63,6 +63,13 @@ class Topology:
     async_mode: bool = False  # DEPRECATED: use exchange="async"
     staleness: int = 1  # async: consume banks published K steps ago
     topk_frac: float = 0.01  # topk: fraction of entries shipped
+    topk_impl: str = "jnp"  # topk select/scatter: "jnp" oracle | Pallas "kernel"
+    # Error feedback (EF-SGD): accumulate the compression residual
+    # r <- (g + r) - decode(encode(g + r)) per peer and re-inject it next
+    # step. Keeps the biased top-k sparsifier convergent at aggressive
+    # fractions; unbiased qsgd converges without it. No-op (residual
+    # identically zero) for lossless protocols.
+    ef: bool = False
     # robust-aggregation knobs (see repro.core.robust); a parameterized
     # spec (exchange="trimmed_mean:0.25" / "krum:3") overrides these
     trim_frac: float = 0.0  # trimmed_mean: fraction dropped from EACH end
@@ -155,6 +162,7 @@ def exchange_context(
         wire_dtype=jnp.dtype(topo.exchange_dtype),
         qsgd=topo.qsgd,
         topk_frac=topo.topk_frac,
+        topk_impl=topo.topk_impl,
         staleness=topo.staleness,
         graph=graph,
         mixing=mixing,
@@ -177,7 +185,9 @@ class TrainState:
     Replaces the raw ``{"params": ..., "opt_state": ...}`` dict;
     ``state["params"]``, ``state.get("mailbox")`` and ``dict(state)`` keep
     working so existing call sites migrate incrementally. ``mailbox`` holds
-    the exchange protocol's carried state (None for sync protocols).
+    the exchange protocol's carried state (None for sync protocols);
+    ``ef`` holds the per-peer error-feedback residual bank — leaves shaped
+    ``(P, *param)`` — when ``Topology(ef=True)``, else None.
     """
 
     params: Any
@@ -185,10 +195,12 @@ class TrainState:
     step: Any
     key: Any
     mailbox: Any = None
+    ef: Any = None
 
     # dict-style access (legacy call sites). Matches the old dict's
-    # semantics: "mailbox" is only present when set, so lookups of an
-    # absent mailbox raise KeyError and membership tests return False.
+    # semantics: the optional fields ("mailbox", "ef") are only present
+    # when set, so lookups of an absent one raise KeyError and membership
+    # tests return False.
     def __getitem__(self, name: str):
         if name not in self.keys():
             raise KeyError(name)
@@ -198,12 +210,12 @@ class TrainState:
         if name not in _TRAIN_STATE_FIELDS:
             return default
         val = getattr(self, name)
-        return default if (name == "mailbox" and val is None) else val
+        return default if (name in _OPTIONAL_STATE_FIELDS and val is None) else val
 
     def keys(self):
         return [
             f for f in _TRAIN_STATE_FIELDS
-            if not (f == "mailbox" and self.mailbox is None)
+            if not (f in _OPTIONAL_STATE_FIELDS and getattr(self, f) is None)
         ]
 
     def __contains__(self, name) -> bool:
@@ -217,6 +229,7 @@ class TrainState:
 
 
 _TRAIN_STATE_FIELDS = tuple(f.name for f in dataclasses.fields(TrainState))
+_OPTIONAL_STATE_FIELDS = ("mailbox", "ef")
 
 
 def _train_state_flatten_with_keys(s: TrainState):
@@ -261,6 +274,7 @@ def as_train_state(state) -> TrainState:
             step=state["step"],
             key=state["key"],
             mailbox=state.get("mailbox"),
+            ef=state.get("ef"),
         )
     raise TypeError(f"expected TrainState or mapping, got {type(state)!r}")
 
@@ -323,6 +337,19 @@ def init_mailbox(grads_like, num_peers: int, *, staleness: int = 1):
     """Zero-initialized staleness-K mailbox ring, leaves (K, P, *grad)."""
     return get_exchange("async").init_state(
         grads_like, ExchangeContext(num_peers=num_peers, staleness=staleness)
+    )
+
+
+def init_ef(grads_like, num_peers: int):
+    """Zero-initialized EF-SGD residual bank: leaves (P, *grad) fp32.
+
+    The bank is replicated across the mesh (each peer reads/writes its own
+    row inside the manual region and the rows are re-gathered so the carry
+    stays consistent everywhere), mirroring the async mailbox layout.
+    """
+    return jax.tree.map(
+        lambda g: jnp.zeros((num_peers,) + tuple(g.shape), jnp.float32),
+        grads_like,
     )
 
 
@@ -394,7 +421,7 @@ def build_p2p_train_step(
             )
         attack_mask = jnp.asarray(adversary.mask(ctx.num_peers))
 
-    def peer_body(params, opt_state, step_idx, key, batch, mailbox):
+    def peer_body(params, opt_state, step_idx, key, batch, mailbox, ef):
         batch = lambda_shard(batch, topo)
         if topo.cast_params_once:
             # One bf16 cast per step: ZeRO weight gathers then move bf16
@@ -454,30 +481,55 @@ def build_p2p_train_step(
                 lambda h, p: jnp.where(attack_mask[r], p, h), grads, poisoned
             )
         if protocol is None:
-            avg, new_mailbox = grads, mailbox
+            avg, new_mailbox, new_ef = grads, mailbox, ef
+        elif ef is not None:
+            # EF-SGD: re-inject this peer's accumulated compression residual
+            # before encoding, then keep what the codec dropped. local_image
+            # is the decoded image of our shipped payload, so the residual
+            # is exactly the information the swarm never received.
+            r = lax.axis_index(topo.axis)
+            corrected = jax.tree.map(
+                lambda g, e: g.astype(jnp.float32) + e[r], grads, ef
+            )
+            avg, local_image, new_mailbox = protocol.combine_ef(
+                corrected, ctx, key=step_key, state=mailbox
+            )
+            residual = jax.tree.map(
+                lambda c, l: c - l.astype(jnp.float32), corrected, local_image
+            )
+            # Re-gather the per-peer rows so the replicated carry stays
+            # identical on every mesh slice (same layout as the async ring).
+            new_ef = jax.tree.map(
+                lambda x: lax.all_gather(x, topo.axis), residual
+            )
         else:
             avg, new_mailbox = protocol.combine(
                 grads, ctx, key=step_key, state=mailbox
             )
+            new_ef = None
         lr = schedule(step_idx)
         updates, opt_state = optimizer.update(avg, opt_state, params, lr)
         params = apply_updates(params, updates)
         if topo.peer_axes:
             loss = lax.pmean(loss, topo.axis)
         metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr, "aux": aux}
-        return params, opt_state, metrics, new_mailbox
+        return params, opt_state, metrics, new_mailbox, new_ef
 
     def run_body(state: TrainState, batch):
         if not topo.peer_axes:
             return peer_body(
                 state.params, state.opt_state, state.step, state.key,
-                batch, state.mailbox,
+                batch, state.mailbox, state.ef,
             )
         replicated = P()
         bspec = jax.tree.map(lambda _: P(topo.axis), batch)
         mspec = (
             None if state.mailbox is None
             else jax.tree.map(lambda _: replicated, state.mailbox)
+        )
+        efspec = (
+            None if state.ef is None
+            else jax.tree.map(lambda _: replicated, state.ef)
         )
         fn = compat.shard_map(
             peer_body,
@@ -489,6 +541,7 @@ def build_p2p_train_step(
                 replicated,
                 bspec,
                 mspec,
+                efspec,
             ),
             out_specs=(
                 jax.tree.map(lambda _: replicated, state.params),
@@ -496,20 +549,22 @@ def build_p2p_train_step(
                 {"loss": replicated, "grad_norm": replicated, "lr": replicated,
                  "aux": replicated},
                 mspec,
+                efspec,
             ),
             axis_names=set(topo.peer_axes),
             check_vma=False,
         )
         return fn(
             state.params, state.opt_state, state.step, state.key,
-            batch, state.mailbox,
+            batch, state.mailbox, state.ef,
         )
 
     def step(state, batch):
         state = as_train_state(state)
-        params, opt_state, metrics, mb = run_body(state, batch)
+        params, opt_state, metrics, mb, ef = run_body(state, batch)
         new_state = state.replace(
-            params=params, opt_state=opt_state, step=state.step + 1, mailbox=mb
+            params=params, opt_state=opt_state, step=state.step + 1,
+            mailbox=mb, ef=ef,
         )
         return new_state, metrics
 

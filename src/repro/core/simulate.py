@@ -72,6 +72,7 @@ class PeerState:
     drops: int = 0  # churn events survived (async mode)
     downtime_s: float = 0.0  # simulated time lost to churn
     reports: List[ExecutionReport] = field(default_factory=list)
+    ef: Any = None  # EF-SGD residual pytree (lazily zero-init on first publish)
 
 
 class LocalP2PCluster:
@@ -94,6 +95,8 @@ class LocalP2PCluster:
         graph_seed: Optional[int] = None,  # defaults to `seed`
         qsgd: Optional[C.QSGDConfig] = None,
         topk_frac: float = 0.01,
+        topk_impl: str = "jnp",  # topk select/scatter: "jnp" | Pallas "kernel"
+        ef: bool = False,  # EF-SGD residual feedback for lossy codecs
         network_bandwidth_bps: float = 1e9,  # simulated inter-peer link
         peer_speeds: Optional[Sequence[float]] = None,
         churn_prob: float = 0.0,  # async: P(peer drops mid-step), per attempt
@@ -181,8 +184,16 @@ class LocalP2PCluster:
         )
         self._replay_cache: Dict[int, Tuple[Any, int]] = {}  # stale_replay
         self.reject_nonfinite = reject_nonfinite
+        self.ef = bool(ef)
+        if self.ef and self.protocol.sharded:
+            raise ValueError(
+                f"exchange protocol {self.protocol.name!r} exchanges shard "
+                "pieces and bypasses the per-peer publish path; error "
+                "feedback applies to lossy whole-gradient codecs (qsgd/topk)"
+            )
         self.xctx = ExchangeContext(
             num_peers=num_peers, qsgd=qsgd, topk_frac=topk_frac,
+            topk_impl=topk_impl,
             graph=self.graph, mixing=self._mixing,
             trim_frac=trim_frac, krum_m=krum_m, krum_f=krum_f,
             robust_clip=robust_clip,
@@ -323,6 +334,11 @@ class LocalP2PCluster:
         ``scaled_noise`` transform the gradient before encoding (composes
         with any codec); ``stale_replay`` re-publishes the attacker's
         previous epoch's encoded payload verbatim.
+
+        Returns this peer's OWN contribution for the consume/update phase:
+        the raw gradient normally, or — under error feedback — the decoded
+        image of the encoded payload, with the residual (what the codec
+        dropped) accumulated into ``peer.ef`` for re-injection next step.
         """
         poisoned = False
         if peer.rank in self._attackers and self.adversary.attack != "stale_replay":
@@ -331,11 +347,26 @@ class LocalP2PCluster:
             )
             grads = poison_gradients(grads, self.adversary, pk)
             poisoned = True
+        if self.ef:
+            if peer.ef is None:
+                peer.ef = jax.tree.map(
+                    lambda g: jnp.zeros(g.shape, jnp.float32), grads
+                )
+            grads = jax.tree.map(
+                lambda g, e: g.astype(jnp.float32) + e, grads, peer.ef
+            )
+        own = grads
         with peer.metrics.stage("send_gradients"):
             key = None
             if self.protocol.requires_key:
                 self.key, key = jax.random.split(self.key)
             payload, nbytes = self.protocol.host_encode(grads, self.xctx, key=key)
+            if self.ef:
+                image = self.protocol.host_decode(payload, grads, self.xctx)
+                peer.ef = jax.tree.map(
+                    lambda g, i: g - i.astype(jnp.float32), grads, image
+                )
+                own = image
             if peer.rank in self._attackers and self.adversary.attack == "stale_replay":
                 replayed = self._replay_cache.get(peer.rank)
                 self._replay_cache[peer.rank] = (payload, nbytes)
@@ -351,7 +382,7 @@ class LocalP2PCluster:
             )
         peer.comm_bytes_sent += nbytes
         peer.send_time_s += wire_s
-        return nbytes
+        return own
 
     def _consume_all(self, peer: PeerState, own_grads, at_time: Optional[float]):
         """ConsumeGradientsFromQueue along the peer's overlay edges.
@@ -600,7 +631,9 @@ class LocalP2PCluster:
             grads[peer.rank] = g
             stats.append((loss, acc))
             if not sharded:
-                self._publish(peer, g, epoch, at_time=0.0)
+                # own contribution for the update phase: the decoded image
+                # of the published payload under EF, the raw gradient else
+                grads[peer.rank] = self._publish(peer, g, epoch, at_time=0.0)
             self.mailbox.barrier_signal(peer.rank, epoch)
         assert self.mailbox.barrier_complete(epoch)  # SynchronisationBarrier
         self.mailbox.barrier_reset(epoch)
@@ -654,9 +687,9 @@ class LocalP2PCluster:
                     engine.schedule_at(peer.clock, attempt_fire, priority=peer.rank)
                     return
                 peer.clock += sim_wall
-                self._publish(peer, cache["g"], epoch, at_time=peer.clock)
+                own = self._publish(peer, cache["g"], epoch, at_time=peer.clock)
                 gp, recv_wire_s = self._consume_all(
-                    peer, cache["g"], at_time=peer.clock
+                    peer, own, at_time=peer.clock
                 )
                 peer.clock += recv_wire_s
                 self._update(peer, gp, self.detector.lr)

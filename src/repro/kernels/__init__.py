@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
-  qsgd.py            — QSGD gradient quantize/dequantize (paper §III-B.4)
+  qsgd.py            — QSGD quantize/dequantize + fused decode-reduce (§III-B.4)
+  topk.py            — top-k select+pack / fused scatter-accumulate decode
   ssd_scan.py        — Mamba-2 chunked SSD scan (SSM archs' hot loop)
   flash_attention.py — blocked online-softmax attention forward
   ops.py             — jit'd public wrappers (interpret on CPU, compiled on TPU)

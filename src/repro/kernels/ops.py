@@ -13,6 +13,7 @@ import jax.numpy as jnp
 from repro.kernels import flash_attention as _fa
 from repro.kernels import qsgd as _qsgd
 from repro.kernels import ssd_scan as _ssd
+from repro.kernels import topk as _topk
 
 
 def default_interpret() -> bool:
@@ -25,6 +26,21 @@ def qsgd_quantize(buckets: jnp.ndarray, u: jnp.ndarray, s: int):
 
 def qsgd_dequantize(levels: jnp.ndarray, norms: jnp.ndarray, s: int):
     return _qsgd.qsgd_dequantize(levels, norms, s, interpret=default_interpret())
+
+
+def qsgd_dequant_reduce(
+    levels: jnp.ndarray, norms: jnp.ndarray, w: jnp.ndarray, s: int
+):
+    """Fused decode: (P, nb, B) int8 banks -> weighted dense sum (nb, B) f32."""
+    return _qsgd.qsgd_dequant_reduce(levels, norms, w, s, interpret=default_interpret())
+
+
+def topk_select_pack(x: jnp.ndarray, k: int):
+    return _topk.topk_select_pack(x, k, interpret=default_interpret())
+
+
+def topk_scatter_accum(vals: jnp.ndarray, idx: jnp.ndarray, w: jnp.ndarray, n: int):
+    return _topk.topk_scatter_accum(vals, idx, w, n, interpret=default_interpret())
 
 
 def ssd_scan(

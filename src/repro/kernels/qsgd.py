@@ -39,6 +39,21 @@ def _dequantize_kernel(lev_ref, nrm_ref, s_ref, out_ref):
     out_ref[...] = lev * (nrm[:, None] / s_ref[0])
 
 
+def _dequant_reduce_kernel(lev_ref, nrm_ref, w_ref, s_ref, out_ref):
+    """Fused decode-dequantize-reduce over the gathered peer banks.
+
+    One VMEM pass: every peer's int8 levels tile is dequantized and folded
+    into the mixing-weighted sum without ever materializing the P dense
+    fp32 gradients in HBM (the unfused path vmap-dequantizes all P banks,
+    then reduces — P x the fp32 traffic).
+    """
+    lev = lev_ref[...].astype(jnp.float32)  # (P, TILE_NB, BUCKET)
+    nrm = nrm_ref[...].astype(jnp.float32)  # (P, TILE_NB)
+    w = w_ref[...].astype(jnp.float32)  # (P,)
+    scale = (w[:, None] * nrm) / s_ref[0]  # (P, TILE_NB)
+    out_ref[...] = jnp.sum(lev * scale[:, :, None], axis=0)
+
+
 @functools.partial(jax.jit, static_argnames=("s", "interpret"))
 def qsgd_quantize(buckets: jnp.ndarray, u: jnp.ndarray, s: int, *, interpret: bool = True):
     """buckets, u: (nb, BUCKET) f32 -> (levels int8 (nb, BUCKET), norms f32 (nb,))."""
@@ -95,4 +110,45 @@ def qsgd_dequantize(levels: jnp.ndarray, norms: jnp.ndarray, s: int, *, interpre
         out_shape=jax.ShapeDtypeStruct((nbp, bucket), jnp.float32),
         interpret=interpret,
     )(levels, norms, s_arr)
+    return out[:nb]
+
+
+@functools.partial(jax.jit, static_argnames=("s", "interpret"))
+def qsgd_dequant_reduce(
+    levels: jnp.ndarray,
+    norms: jnp.ndarray,
+    w: jnp.ndarray,
+    s: int,
+    *,
+    interpret: bool = True,
+):
+    """Fused decode-dequantize-reduce over P gathered peer banks.
+
+    levels (P, nb, BUCKET) int8, norms (P, nb) f32, w (P,) f32 mixing
+    weights -> (nb, BUCKET) f32 = sum_p w[p] * dequantize(levels[p], norms[p]).
+    Replaces the unfused vmap-dequantize-then-reduce path with a single
+    VMEM pass per tile (the dense fp32 per-peer banks are never built).
+    """
+    P, nb, bucket = levels.shape
+    assert bucket % 128 == 0
+    assert norms.shape == (P, nb) and w.shape == (P,)
+    pad = (-nb) % TILE_NB
+    if pad:
+        levels = jnp.pad(levels, ((0, 0), (0, pad), (0, 0)))
+        norms = jnp.pad(norms, ((0, 0), (0, pad)))
+    nbp = nb + pad
+    s_arr = jnp.full((1,), float(s), jnp.float32)
+    out = pl.pallas_call(
+        _dequant_reduce_kernel,
+        grid=(nbp // TILE_NB,),
+        in_specs=[
+            pl.BlockSpec((P, TILE_NB, bucket), lambda i: (0, i, 0)),
+            pl.BlockSpec((P, TILE_NB), lambda i: (0, i)),
+            pl.BlockSpec((P,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_NB, bucket), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbp, bucket), jnp.float32),
+        interpret=interpret,
+    )(levels, norms, w.astype(jnp.float32), s_arr)
     return out[:nb]

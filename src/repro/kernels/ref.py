@@ -19,6 +19,49 @@ from jax import lax
 from repro.core.compression import qsgd_quantize_ref, qsgd_dequantize_ref  # noqa: F401
 
 
+def qsgd_dequant_reduce_ref(
+    levels: jnp.ndarray,  # (P, nb, BUCKET) int8
+    norms: jnp.ndarray,  # (P, nb) f32
+    w: jnp.ndarray,  # (P,) f32 mixing weights
+    s: int,
+) -> jnp.ndarray:
+    """Unfused decode: dequantize every peer bank, then weighted-reduce.
+
+    This is the vmap-dequantize-then-reduce formulation the fused
+    ``qsgd._dequant_reduce_kernel`` replaces — it materializes all P dense
+    fp32 banks before reducing. Returns (nb, BUCKET) f32.
+    """
+    deq = jax.vmap(lambda l, n: qsgd_dequantize_ref(l, n, s))(levels, norms)
+    return jnp.tensordot(w.astype(jnp.float32), deq, axes=(0, 0))
+
+
+# ---------------------------------------------------------------------------
+# Top-k sparsification (select+pack encode, scatter-accumulate decode)
+# ---------------------------------------------------------------------------
+
+
+def topk_select_ref(x: jnp.ndarray, k: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (n,) -> (values f32 (k,), indices int32 (k,)) of the k largest |x|."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    _, idx = lax.top_k(jnp.abs(flat), k)
+    return jnp.take(flat, idx), idx.astype(jnp.int32)
+
+
+def topk_scatter_ref(
+    vals: jnp.ndarray,  # (P, k) f32
+    idx: jnp.ndarray,  # (P, k) int32
+    w: jnp.ndarray,  # (P,) f32 mixing weights
+    n: int,
+) -> jnp.ndarray:
+    """Weighted scatter-accumulate of P sparse banks into a dense (n,) f32."""
+    contrib = vals.astype(jnp.float32) * w.astype(jnp.float32)[:, None]
+    return (
+        jnp.zeros((n,), jnp.float32)
+        .at[idx.reshape(-1)]
+        .add(contrib.reshape(-1))
+    )
+
+
 # ---------------------------------------------------------------------------
 # SSD: naive per-timestep recurrence  h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t
 # ---------------------------------------------------------------------------

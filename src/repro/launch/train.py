@@ -67,6 +67,19 @@ def main(argv=None):
                     help="async: consume banks published K steps ago")
     ap.add_argument("--topk-frac", type=float, default=0.01,
                     help="topk: fraction of gradient entries shipped")
+    ap.add_argument("--topk-impl", default="jnp", choices=["jnp", "kernel"],
+                    help="topk select/scatter implementation: jnp oracle or "
+                         "the Pallas select+pack / scatter-accumulate kernels")
+    ap.add_argument("--qsgd-impl", default="jnp", choices=["jnp", "kernel"],
+                    help="qsgd codec implementation: jnp oracle or the Pallas "
+                         "quantize + fused decode-dequantize-reduce kernels")
+    ap.add_argument("--qsgd-levels", type=int, default=127,
+                    help="qsgd quantization levels s (int8 range; 3 = the "
+                         "aggressive setting EF keeps convergent)")
+    ap.add_argument("--ef", action="store_true",
+                    help="EF-SGD error feedback: accumulate the compression "
+                         "residual per peer and re-inject it next step "
+                         "(keeps qsgd/topk convergent at aggressive settings)")
     # robust aggregation + adversary model (repro.core.robust)
     ap.add_argument("--trim-frac", type=float, default=0.0,
                     help="trimmed_mean: fraction trimmed from EACH end "
@@ -174,9 +187,14 @@ def main(argv=None):
         exchange=args.exchange,
         graph=args.graph,
         graph_seed=args.graph_seed,
-        qsgd=QSGDConfig(levels=127, bucket=512) if args.exchange == "qsgd" else None,
+        qsgd=(
+            QSGDConfig(levels=args.qsgd_levels, bucket=512, impl=args.qsgd_impl)
+            if args.exchange == "qsgd" else None
+        ),
         staleness=args.staleness,
         topk_frac=args.topk_frac,
+        topk_impl=args.topk_impl,
+        ef=args.ef,
         trim_frac=args.trim_frac,
         krum_m=args.krum_m,
         robust_clip=args.robust_clip,

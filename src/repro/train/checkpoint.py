@@ -107,16 +107,31 @@ def restore_state(path: str, like) -> Tuple[Any, dict]:
         with open(mp) as f:
             meta = json.load(f)
     if meta.get("format") == STATE_FORMAT:
-        if like.mailbox is not None:
-            # A v2 checkpoint saved under a sync protocol has no mailbox
-            # leaves; restoring into an async `like` keeps its cold ring.
+        # Optional TrainState fields (the async mailbox ring, the EF
+        # residual bank) may be absent from the saved checkpoint — e.g. a
+        # v2 state saved under a sync protocol restored into an async
+        # `like`, or a pre-EF checkpoint restored with ef=True. Restore
+        # the saved fields and keep `like`'s cold buffers for the rest.
+        absent = []
+        if like.mailbox is not None or like.ef is not None:
             with np.load(path if path.endswith(".npz") else path + ".npz") as npz:
-                saved_mailbox = any(
-                    k == "mailbox" or k.startswith("mailbox/") for k in npz.files
-                )
-            if not saved_mailbox:
-                core, cmeta = restore(path, like.replace(mailbox=None))
-                return core.replace(mailbox=like.mailbox), cmeta
+                for fieldname in ("mailbox", "ef"):
+                    if getattr(like, fieldname) is None:
+                        continue
+                    saved = any(
+                        k == fieldname or k.startswith(fieldname + "/")
+                        for k in npz.files
+                    )
+                    if not saved:
+                        absent.append(fieldname)
+        if absent:
+            core, cmeta = restore(
+                path, like.replace(**{f: None for f in absent})
+            )
+            return (
+                core.replace(**{f: getattr(like, f) for f in absent}),
+                cmeta,
+            )
         return restore(path, like)
     params, pmeta = restore(path, like.params)
     return like.replace(params=params), {**meta, **pmeta}

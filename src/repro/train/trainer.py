@@ -35,6 +35,7 @@ from repro.core.p2p import (
     as_train_state,
     build_p2p_train_step,
     exchange_context,
+    init_ef,
 )
 from repro.core.robust import AdversarySpec
 from repro.core.serverless import ExecutionReport, ServerlessExecutor
@@ -66,6 +67,7 @@ class P2PTrainer:
         instance_type: str = "t2.large",  # EC2 tier of the instance baseline
         instance_config: Optional[InstanceConfig] = None,  # boot/churn model
         adversary: Optional[AdversarySpec] = None,  # Byzantine peers on the mesh
+        ef: Optional[bool] = None,  # error feedback override (else topo.ef)
     ):
         import dataclasses as _dc
 
@@ -75,6 +77,8 @@ class P2PTrainer:
             )
         if graph is not None:
             topo = _dc.replace(topo, graph=graph)
+        if ef is not None:
+            topo = _dc.replace(topo, ef=bool(ef))
         self.cfg = cfg
         self.optimizer = optimizer
         self.topo = topo
@@ -132,6 +136,14 @@ class P2PTrainer:
             mailbox = self.protocol.init_state(state.params, self.ctx)
             if mailbox is not None:
                 state = state.replace(mailbox=mailbox)
+            if self.topo.ef:
+                # EF residual bank (zeros): leaves (P, *param) fp32. Kept for
+                # lossless protocols too — their residual stays identically
+                # zero (combine_ef ships grads verbatim), which IS the
+                # equivalence rail the tests pin down.
+                state = state.replace(
+                    ef=init_ef(state.params, self.ctx.num_peers)
+                )
         return state
 
     # -- stepping ------------------------------------------------------------
