@@ -42,8 +42,10 @@ for n in available_graphs():
   # fast rails only (kernel==jnp equivalence, wire accounting, EF finite);
   # the full retention/timing run is `python -m benchmarks.run --only fig13`
   python -m benchmarks.fig13_fused_compression --smoke
-  echo "== smoke: docs link check =="
-  python scripts/check_links.py
+  echo "== smoke: analysis suite (lint + contracts + trace + links) =="
+  # full four-pass suite, JSON report artifact for CI; the trace pass
+  # double-runs the seeded simulators and asserts identical digests
+  python -m repro.analysis --fail-on=error --json ANALYSIS_REPORT.json
 }
 
 if [[ "${1:-}" == "--fast" ]]; then

@@ -1,52 +1,28 @@
 #!/usr/bin/env python3
-"""Docs link checker: verify every relative link in README.md and
-docs/*.md resolves to an existing file.
+"""Thin shim over the analysis suite's links pass.
+
+The docs link checker now lives in ``repro.analysis.links`` as pass 4 of
+``python -m repro.analysis`` (which `scripts/check.sh --fast` and CI run
+with all passes). This entry point is kept for muscle memory:
 
     python scripts/check_links.py
-
-External links (http/https/mailto) and pure in-page anchors (#...) are
-skipped; a relative link's optional #fragment is stripped before the
-existence check. Exits non-zero listing every broken link — wired into
-`scripts/check.sh --fast` and CI so docs can't rot silently.
 """
 from __future__ import annotations
 
-import re
 import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parents[1]
-# [text](target) — target up to the first closing paren / whitespace
-LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
-
-
-def check_file(md: Path) -> list:
-    broken = []
-    for m in LINK_RE.finditer(md.read_text()):
-        target = m.group(1)
-        if target.startswith(SKIP_PREFIXES):
-            continue
-        path = target.split("#", 1)[0]
-        if not path:
-            continue
-        if not (md.parent / path).exists():
-            broken.append((md.relative_to(ROOT), target))
-    return broken
+sys.path.insert(0, str(ROOT / "src"))
 
 
 def main() -> int:
-    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
-    broken, checked = [], 0
-    for f in files:
-        if not f.exists():
-            broken.append((f.relative_to(ROOT), "<file missing>"))
-            continue
-        checked += 1
-        broken.extend(check_file(f))
-    if broken:
-        for f, target in broken:
-            print(f"BROKEN LINK: {f}: {target}")
+    from repro.analysis.links import links_pass
+
+    findings, checked = links_pass(ROOT)
+    if findings:
+        for f in findings:
+            print(f"BROKEN LINK: {f.path}:{f.line}: {f.message}")
         return 1
     print(f"link-check: {checked} markdown files, all relative links resolve")
     return 0

@@ -1,0 +1,112 @@
+"""Static + dynamic analysis suite for the repro codebase.
+
+Four passes behind one CLI (``python -m repro.analysis``):
+
+* **lint** — AST rules over reproducibility/correctness hazards (PRNG key
+  reuse, traced-value branching, unseeded RNG, mutable defaults,
+  unordered iteration in order-sensitive modules, float equality on
+  cost/time quantities, un-ClassVar'd registry attributes, control-flow
+  asserts, wall-clock reads in the simulator core). See
+  :mod:`repro.analysis.lint`.
+* **contracts** — executes every registered ExchangeProtocol / PeerGraph /
+  AllocationPolicy against its declared ClassVar contract. See
+  :mod:`repro.analysis.contracts`.
+* **trace** — double-runs the seeded simulators with a
+  :class:`~repro.analysis.trace.TraceRecorder` attached and asserts
+  identical trace digests plus race/ordering invariants. See
+  :mod:`repro.analysis.trace`.
+* **links** — README/docs relative-link integrity (absorbed
+  ``scripts/check_links.py``). See :mod:`repro.analysis.links`.
+
+``scripts/check.sh --fast`` and CI run the full suite with
+``--fail-on=error``; findings render human-readably and serialize to a
+JSON report artifact (``--json``). Per-line suppression: ``# noqa: RULE``
+or ``# analysis: ignore[RULE]``. Rule catalog: ``docs/ANALYSIS.md``.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Optional, Sequence
+
+from repro.analysis.common import (
+    Finding, Report, SEVERITIES, filter_suppressed, severity_rank,
+    sorted_findings, suppressed_rules,
+)
+
+ALL_PASSES = ("lint", "contracts", "trace", "links")
+
+
+def run_analysis(
+    paths: Optional[Sequence[Path]] = None,
+    *,
+    root: Optional[Path] = None,
+    passes: Sequence[str] = ALL_PASSES,
+    deep: bool = True,
+) -> Report:
+    """Run the selected passes and return one merged :class:`Report`.
+
+    ``paths`` scopes the lint pass (default: ``<root>/src``); contracts,
+    trace and links are whole-project passes and ignore it. ``deep=False``
+    skips the JAX-compiling cluster scenario in the trace pass.
+    """
+    root = Path(root) if root is not None else find_root()
+    report = Report()
+    unknown = set(passes) - set(ALL_PASSES)
+    if unknown:
+        raise ValueError(
+            f"unknown analysis pass(es): {', '.join(sorted(unknown))}; "
+            f"available: {', '.join(ALL_PASSES)}"
+        )
+    if "lint" in passes:
+        from repro.analysis.lint import lint_paths
+
+        targets = [Path(p) for p in paths] if paths else [root / "src"]
+        findings, files = lint_paths(targets, root)
+        report.extend(findings)
+        report.files_scanned += files
+        report.passes_run.append("lint")
+    if "contracts" in passes:
+        from repro.analysis.contracts import contracts_pass
+
+        findings, _checks = contracts_pass()
+        report.extend(findings)
+        report.passes_run.append("contracts")
+    if "trace" in passes:
+        from repro.analysis.trace import trace_pass
+
+        findings, _scenarios = trace_pass(deep=deep)
+        report.extend(findings)
+        report.passes_run.append("trace")
+    if "links" in passes:
+        from repro.analysis.links import links_pass
+
+        findings, files = links_pass(root)
+        report.extend(findings)
+        report.files_scanned += files
+        report.passes_run.append("links")
+    return report
+
+
+def find_root(start: Optional[Path] = None) -> Path:
+    """Locate the repo root: the nearest ancestor holding ``pytest.ini``
+    (or ``.git``), falling back to the current directory."""
+    p = Path(start) if start is not None else Path.cwd()
+    p = p.resolve()
+    for candidate in (p, *p.parents):
+        if (candidate / "pytest.ini").exists() or (candidate / ".git").exists():
+            return candidate
+    return p
+
+
+__all__ = [
+    "ALL_PASSES",
+    "Finding",
+    "Report",
+    "SEVERITIES",
+    "filter_suppressed",
+    "find_root",
+    "run_analysis",
+    "severity_rank",
+    "sorted_findings",
+    "suppressed_rules",
+]

@@ -1,0 +1,64 @@
+"""CLI for the analysis suite.
+
+    python -m repro.analysis [paths ...] [--fail-on SEV] [--json FILE]
+                             [--passes lint,contracts,trace,links] [--fast]
+
+Exit status is 1 when any finding is at or above ``--fail-on`` (default
+``error``; ``never`` always exits 0). ``paths`` scope the lint pass only;
+the other passes are whole-project. ``--fast`` skips the JAX-compiling
+cluster scenario of the trace pass (CI runs the full suite).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis import ALL_PASSES, SEVERITIES, find_root, run_analysis
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Run the repro static/dynamic analysis suite.",
+    )
+    ap.add_argument(
+        "paths", nargs="*", type=Path,
+        help="files/directories for the lint pass (default: <root>/src)",
+    )
+    ap.add_argument(
+        "--fail-on", default="error", choices=(*SEVERITIES, "never"),
+        help="exit 1 when any finding is at/above this severity "
+             "(default: error)",
+    )
+    ap.add_argument(
+        "--json", type=Path, default=None, metavar="FILE",
+        help="also write the full report as JSON",
+    )
+    ap.add_argument(
+        "--passes", default=",".join(ALL_PASSES), metavar="P1,P2",
+        help=f"comma-separated subset of: {', '.join(ALL_PASSES)}",
+    )
+    ap.add_argument(
+        "--root", type=Path, default=None,
+        help="repo root (default: auto-detected from cwd)",
+    )
+    ap.add_argument(
+        "--fast", action="store_true",
+        help="skip the trace pass's JAX cluster scenario",
+    )
+    args = ap.parse_args(argv)
+
+    root = find_root(args.root) if args.root is None else args.root.resolve()
+    passes = tuple(p.strip() for p in args.passes.split(",") if p.strip())
+    report = run_analysis(
+        args.paths or None, root=root, passes=passes, deep=not args.fast
+    )
+    if args.json is not None:
+        report.write_json(args.json)
+    print(report.render())
+    return 1 if report.failed(args.fail_on) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

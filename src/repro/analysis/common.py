@@ -1,0 +1,130 @@
+"""Shared finding/report plumbing for the ``repro.analysis`` suite.
+
+Every pass (lint / contracts / trace / links) emits :class:`Finding`
+records; the CLI collects them into a :class:`Report` with JSON + human
+rendering and severity gating (``--fail-on``). Suppression is per-line:
+a trailing ``# noqa: RULE`` or ``# analysis: ignore[RULE]`` comment on
+the flagged line silences that rule there (``RULE`` may be a rule id
+like ``RA004`` or ``*`` for all rules).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+SEVERITIES = ("info", "warning", "error")  # ascending
+
+
+def severity_rank(severity: str) -> int:
+    try:
+        return SEVERITIES.index(severity)
+    except ValueError:
+        raise ValueError(
+            f"unknown severity {severity!r}; expected one of {SEVERITIES}"
+        ) from None
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One violation: where, which rule, how bad, and why it matters."""
+
+    rule: str  # rule id, e.g. "RA004"
+    severity: str  # "info" | "warning" | "error"
+    path: str  # repo-relative file (or pseudo-path like "<registry>")
+    line: int  # 1-based; 0 when not line-addressable (contracts/trace)
+    message: str
+    pass_name: str = "lint"  # which pass produced it
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: {self.severity.upper()} [{self.rule}] {self.message}"
+
+
+# -- suppression comments ----------------------------------------------------
+
+_NOQA_RE = re.compile(
+    r"#\s*(?:noqa:\s*(?P<noqa>[\w*, ]+)|analysis:\s*ignore\[(?P<ign>[\w*, ]+)\])",
+    re.IGNORECASE,
+)
+
+
+def suppressed_rules(source_line: str) -> frozenset:
+    """Rule ids silenced by a trailing comment on ``source_line``."""
+    m = _NOQA_RE.search(source_line)
+    if not m:
+        return frozenset()
+    raw = m.group("noqa") or m.group("ign") or ""
+    return frozenset(r.strip().upper() for r in raw.split(",") if r.strip())
+
+
+def filter_suppressed(
+    findings: Sequence[Finding], lines: Sequence[str]
+) -> List[Finding]:
+    """Drop findings whose source line carries a matching suppression."""
+    kept = []
+    for f in findings:
+        if 1 <= f.line <= len(lines):
+            rules = suppressed_rules(lines[f.line - 1])
+            if "*" in rules or f.rule.upper() in rules:
+                continue
+        kept.append(f)
+    return kept
+
+
+# -- report ------------------------------------------------------------------
+
+
+@dataclass
+class Report:
+    """All findings from one analysis run, with gating + serialization."""
+
+    findings: List[Finding] = field(default_factory=list)
+    passes_run: List[str] = field(default_factory=list)
+    files_scanned: int = 0
+
+    def extend(self, findings: Sequence[Finding]):
+        self.findings.extend(findings)
+
+    def count(self, severity: str) -> int:
+        return sum(1 for f in self.findings if f.severity == severity)
+
+    def worst_rank(self) -> int:
+        return max((severity_rank(f.severity) for f in self.findings), default=-1)
+
+    def failed(self, fail_on: str) -> bool:
+        """True when any finding is at/above the ``fail_on`` severity."""
+        if fail_on == "never":
+            return False
+        return self.worst_rank() >= severity_rank(fail_on)
+
+    def to_json(self) -> Dict:
+        return {
+            "passes": sorted(self.passes_run),
+            "files_scanned": self.files_scanned,
+            "summary": {s: self.count(s) for s in SEVERITIES},
+            "findings": [asdict(f) for f in sorted_findings(self.findings)],
+        }
+
+    def write_json(self, path: Path):
+        Path(path).write_text(json.dumps(self.to_json(), indent=2) + "\n")
+
+    def render(self) -> str:
+        lines = [f.render() for f in sorted_findings(self.findings)]
+        summary = ", ".join(f"{self.count(s)} {s}" for s in reversed(SEVERITIES))
+        lines.append(
+            f"analysis: {len(self.findings)} finding(s) ({summary}) across "
+            f"{self.files_scanned} file(s); passes: "
+            f"{', '.join(sorted(self.passes_run)) or 'none'}"
+        )
+        return "\n".join(lines)
+
+
+def sorted_findings(findings: Sequence[Finding]) -> List[Finding]:
+    """Stable order: worst first, then path / line / rule."""
+    return sorted(
+        findings,
+        key=lambda f: (-severity_rank(f.severity), f.path, f.line, f.rule),
+    )

@@ -1,0 +1,408 @@
+"""Pass 2 — registry contract cross-validation.
+
+The exchange/graph/allocation registries promise behaviour through
+declarative ``ClassVar`` flags (``repro/core/exchange.py`` lines 119-125:
+``name``, ``is_async``, ``requires_key``, ``decomposes_per_edge``,
+``requires_full_graph``, ``sharded``, ``lossy``). Nothing in Python makes
+a flag true — a protocol can declare ``lossy = False`` while its codec
+drops bits, and every downstream consumer (EF-SGD, the cost model, the
+cluster's refusal paths) silently mis-behaves. This pass instantiates
+every registered implementation and *executes* each flag's observable
+consequence against its declaration:
+
+* ``RC001`` name integrity — ``cls.name`` matches its registry key, no
+  ``":"`` inside a name (it is the spec parameter separator).
+* ``RC002`` ``requires_key`` ⇔ ``host_encode(key=None)`` raises.
+* ``RC003`` ``lossy`` ⇔ ``combine_ef`` is overridden (EF needs the local
+  decoded image; lossless protocols must keep the zero-residual default).
+* ``RC004`` ``lossy`` ⇔ the host wire roundtrip is lossy: encode+decode
+  of a seeded random gradient tree must be exact for lossless protocols
+  and must NOT be exact for lossy ones.
+* ``RC005`` ``is_async`` ⇔ carried state: ``init_state`` non-None and
+  ``combine(state=None)`` refused.
+* ``RC006`` refusal paths — ``exchange_context`` on a sparse overlay
+  (ring, P=6) raises iff ``requires_full_graph or not
+  decomposes_per_edge``.
+* ``RC007`` wire accounting — decomposing protocols satisfy
+  ``wire_bytes == round(per_edge * degree)`` numerically; fused
+  collectives override ``wire_bytes``; sharded protocols override
+  ``host_wire_bytes``.
+* ``RC008`` ``sharded`` ⇔ the shard surface exists (``plan`` /
+  ``host_encode_shard`` / ``host_decode_shard``) and the plan produces
+  one shard per peer.
+* ``RC009`` spec parsing — parameterized protocols accept their sample
+  ``name:arg`` spec; every other protocol rejects ``name:1`` with a
+  clean ``ValueError`` (never a raw ``TypeError`` signature leak). Same
+  check for the graph registry.
+* ``RC010`` graph registry — every overlay at P=8 is symmetric,
+  connected, and its Metropolis–Hastings mixing matrix is doubly
+  stochastic (rows sum to 1, symmetric).
+* ``RC011`` allocation registry — every policy returns the planner's
+  ``planned_mb`` when it has no history to learn from.
+* ``RC012`` (info) cross-registry name reuse — the same name registered
+  in two registries is legal (namespaces are distinct) but worth knowing.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.analysis.common import Finding
+
+PASS_NAME = "contracts"
+
+CONTRACT_RULES = tuple(f"RC{i:03d}" for i in range(1, 13))
+
+# Parameterized protocols and a known-good sample argument; every other
+# registered name must REJECT a ':' parameter.
+PARAM_EXCHANGE_SAMPLES: Dict[str, str] = {"trimmed_mean": "0.25", "krum": "2"}
+PARAM_GRAPH_SAMPLES: Dict[str, str] = {"gossip": "3", "hierarchical": "4"}
+
+_P = 6  # peer count used for contract-instantiated contexts
+
+
+def _where(cls: type) -> Tuple[str, int]:
+    try:
+        path = inspect.getsourcefile(cls) or "<registry>"
+        line = inspect.getsourcelines(cls)[1]
+    except (OSError, TypeError):
+        path, line = "<registry>", 1
+    return path, line
+
+
+class _Checker:
+    def __init__(self) -> None:
+        self.findings: List[Finding] = []
+        self.checks_run = 0
+
+    def expect(
+        self, ok: bool, rule: str, cls: type, message: str, *,
+        severity: str = "error",
+    ) -> None:
+        self.checks_run += 1
+        if not ok:
+            path, line = _where(cls)
+            self.findings.append(Finding(
+                rule=rule, severity=severity, path=path, line=line,
+                message=f"{cls.__name__}: {message}", pass_name=PASS_NAME,
+            ))
+
+    def raises(
+        self, fn: Callable[[], Any], exc: type = ValueError
+    ) -> Optional[bool]:
+        """True if fn raised exc, False if it returned, None on another
+        exception (reported by the caller as its own violation)."""
+        try:
+            fn()
+        except exc:
+            return True
+        except Exception:
+            return None
+        return False
+
+
+def _sample_tree(seed: int = 0):
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.standard_normal((8, 4)), jnp.float32),
+        "b": jnp.asarray(rng.standard_normal((16,)), jnp.float32),
+    }
+
+
+def _trees_equal(a, b) -> bool:
+    import jax
+
+    leaves_a, leaves_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(leaves_a) == len(leaves_b) and all(
+        np.array_equal(np.asarray(x, np.float32), np.asarray(y, np.float32))
+        for x, y in zip(leaves_a, leaves_b)
+    )
+
+
+def _check_exchange(ck: _Checker) -> None:
+    import jax
+
+    from repro.core.exchange import (
+        ExchangeContext, ExchangeProtocol, available_exchanges, get_exchange,
+    )
+    from repro.core.p2p import Topology, exchange_context
+
+    ctx = ExchangeContext(num_peers=_P)
+    tree = _sample_tree()
+    key = jax.random.PRNGKey(0)
+
+    for name in available_exchanges():
+        spec = name
+        if name in PARAM_EXCHANGE_SAMPLES:
+            spec = f"{name}:{PARAM_EXCHANGE_SAMPLES[name]}"
+        proto = get_exchange(spec)
+        cls = type(proto)
+
+        # RC001 — name integrity
+        ck.expect(
+            proto.name == name, "RC001", cls,
+            f"registered as {name!r} but cls.name is {proto.name!r}",
+        )
+        ck.expect(
+            ":" not in name, "RC001", cls,
+            f"name {name!r} contains ':', the spec parameter separator",
+        )
+
+        # RC002 — requires_key ⇔ keyless host_encode refused
+        keyless = ck.raises(lambda: proto.host_encode(tree, ctx, key=None))
+        if proto.requires_key:
+            ck.expect(
+                keyless is True, "RC002", cls,
+                "declares requires_key=True but host_encode(key=None) did "
+                "not raise ValueError",
+            )
+        else:
+            ck.expect(
+                keyless is False, "RC002", cls,
+                "declares requires_key=False but host_encode(key=None) "
+                "failed — either it needs a key (set requires_key=True) or "
+                "the keyless encode path is broken",
+            )
+
+        # RC003 — lossy ⇔ combine_ef override
+        overridden = cls.combine_ef is not ExchangeProtocol.combine_ef
+        ck.expect(
+            overridden == proto.lossy, "RC003", cls,
+            f"lossy={proto.lossy} but combine_ef is "
+            f"{'overridden' if overridden else 'the zero-residual default'} "
+            "— error feedback only applies to (and must cover all) lossy "
+            "codecs",
+        )
+
+        # RC004 — lossy ⇔ wire roundtrip drops information (dense wire only)
+        if not proto.sharded:
+            payload, nbytes = proto.host_encode(
+                tree, ctx, key=key if proto.requires_key else None
+            )
+            decoded = proto.host_decode(payload, tree, ctx)
+            exact = _trees_equal(decoded, tree)
+            ck.expect(
+                exact != proto.lossy, "RC004", cls,
+                f"lossy={proto.lossy} but the host encode/decode roundtrip "
+                f"{'was exact' if exact else 'changed the gradient'}",
+            )
+            ck.expect(
+                isinstance(nbytes, int) and nbytes > 0, "RC004", cls,
+                f"host_encode reported non-positive wire bytes ({nbytes!r})",
+            )
+
+        # RC005 — is_async ⇔ carried mailbox state
+        state = proto.init_state(tree, ctx)
+        if proto.is_async:
+            ck.expect(
+                state is not None, "RC005", cls,
+                "declares is_async=True but init_state returned None — an "
+                "async protocol must carry mailbox state",
+            )
+            stateless = ck.raises(
+                lambda: proto.combine(tree, ctx, state=None)
+            )
+            ck.expect(
+                stateless is True, "RC005", cls,
+                "declares is_async=True but combine(state=None) did not "
+                "refuse with ValueError",
+            )
+        else:
+            ck.expect(
+                state is None, "RC005", cls,
+                "declares is_async=False but init_state returned carried "
+                "state",
+            )
+
+        # RC006 — sparse-overlay refusal path matches the flags
+        must_refuse = proto.requires_full_graph or not proto.decomposes_per_edge
+        refused = ck.raises(lambda: exchange_context(
+            Topology(exchange=spec, graph="ring"), num_peers=_P
+        ))
+        ck.expect(
+            refused is must_refuse, "RC006", cls,
+            f"requires_full_graph={proto.requires_full_graph}, "
+            f"decomposes_per_edge={proto.decomposes_per_edge} but a ring "
+            f"overlay was {'accepted' if refused is False else 'refused' if refused else 'broken'}"
+            " — the flags and the refusal path disagree",
+        )
+
+        # RC007 — wire accounting matches the decomposition flag
+        if proto.decomposes_per_edge and not proto.sharded:
+            per_edge = proto.wire_bytes_per_edge(tree, ctx)
+            total = proto.wire_bytes(tree, ctx)
+            ck.expect(
+                total == int(round(per_edge * ctx.degree)), "RC007", cls,
+                f"decomposes_per_edge=True but wire_bytes ({total}) != "
+                f"per_edge ({per_edge}) x degree ({ctx.degree})",
+            )
+        if not proto.decomposes_per_edge or proto.sharded:
+            ck.expect(
+                cls.wire_bytes is not ExchangeProtocol.wire_bytes, "RC007",
+                cls,
+                "a fused/sharded collective must override wire_bytes — the "
+                "per-edge x degree default does not describe its traffic",
+            )
+        if proto.sharded:
+            ck.expect(
+                cls.host_wire_bytes is not ExchangeProtocol.host_wire_bytes,
+                "RC007", cls,
+                "sharded=True but host_wire_bytes is the one-edge-payload "
+                "default; shard scatter publishes P payloads per step",
+            )
+
+        # RC008 — sharded ⇔ shard surface
+        shard_api = all(
+            callable(getattr(proto, m, None))
+            for m in ("plan", "host_encode_shard", "host_decode_shard")
+        )
+        ck.expect(
+            shard_api == proto.sharded, "RC008", cls,
+            f"sharded={proto.sharded} but the shard surface (plan / "
+            f"host_encode_shard / host_decode_shard) is "
+            f"{'present' if shard_api else 'missing'}",
+        )
+        if proto.sharded and shard_api:
+            plan = proto.plan(tree, ctx)
+            ck.expect(
+                int(plan.num_shards) == _P, "RC008", cls,
+                f"plan produced {plan.num_shards} shards for {_P} peers — "
+                "the sharded exchange owns one shard per peer",
+            )
+            row = plan.shards(tree)[0]
+            wire, nb = proto.host_encode_shard(row, ctx)
+            back = proto.host_decode_shard(wire, ctx)
+            ck.expect(
+                np.allclose(np.asarray(back), np.asarray(row, np.float32)),
+                "RC008", cls, "shard encode/decode roundtrip changed values",
+            )
+
+        # RC009 — spec parameter parsing
+        if name in PARAM_EXCHANGE_SAMPLES:
+            parsed = ck.raises(lambda: get_exchange(spec))
+            ck.expect(
+                parsed is False, "RC009", cls,
+                f"sample spec {spec!r} was rejected by get_exchange",
+            )
+        else:
+            rejected = ck.raises(lambda: get_exchange(f"{name}:1"))
+            ck.expect(
+                rejected is True, "RC009", cls,
+                f"{name}:1 must be rejected with a clean ValueError (got "
+                f"{'no error' if rejected is False else 'a non-ValueError'})",
+            )
+
+
+def _check_graphs(ck: _Checker) -> None:
+    from repro.core.graph import available_graphs, get_graph
+
+    P = 8
+    for name in available_graphs():
+        if name == "static":
+            # name-only construction is (correctly) refused — build an
+            # explicit instance for the structural checks instead
+            from repro.core.graph import StaticGraph
+
+            refused = ck.raises(lambda: get_graph("static", P, seed=0))
+            ck.expect(
+                refused is True, "RC009", StaticGraph,
+                "get_graph('static', P) must refuse with ValueError — the "
+                "static overlay needs an explicit adjacency",
+            )
+            g = StaticGraph.from_edges(P, [(i, (i + 1) % P) for i in range(P)])
+        else:
+            spec = name
+            if name in PARAM_GRAPH_SAMPLES:
+                spec = f"{name}:{PARAM_GRAPH_SAMPLES[name]}"
+            g = get_graph(spec, P, seed=0)
+        cls = type(g)
+        ck.expect(
+            g.name == name, "RC001", cls,
+            f"registered as {name!r} but cls.name is {g.name!r}",
+        )
+        adj = np.asarray(g.adjacency, bool)
+        ck.expect(
+            bool((adj == adj.T).all()), "RC010", cls,
+            "adjacency is not symmetric — the P2P overlay is undirected",
+        )
+        ck.expect(
+            not adj.diagonal().any(), "RC010", cls,
+            "adjacency has self-loops; a peer is not its own neighbor",
+        )
+        ck.expect(
+            bool(g.is_connected), "RC010", cls,
+            f"overlay is disconnected at P={P}; gossip averaging cannot "
+            "reach consensus",
+        )
+        W = np.asarray(g.mixing_matrix(), np.float64)
+        ck.expect(
+            np.allclose(W.sum(axis=1), 1.0) and np.allclose(W, W.T),
+            "RC010", cls,
+            "Metropolis–Hastings mixing matrix is not doubly stochastic",
+        )
+        # RC009 — non-param graphs reject a ':' parameter cleanly
+        if name not in PARAM_GRAPH_SAMPLES and name != "static":
+            rejected = ck.raises(lambda: get_graph(f"{name}:2", P, seed=0))
+            ck.expect(
+                rejected is True, "RC009", cls,
+                f"{name}:2 must be rejected with a clean ValueError (got "
+                f"{'no error' if rejected is False else 'a non-ValueError'})",
+            )
+
+
+def _check_allocations(ck: _Checker) -> None:
+    from repro.core.events import available_allocations, get_allocation
+
+    for name in available_allocations():
+        pol = get_allocation(name)
+        cls = type(pol)
+        ck.expect(
+            pol.name == name, "RC001", cls,
+            f"registered as {name!r} but cls.name is {pol.name!r}",
+        )
+        got = pol.memory_mb(epoch=0, planned_mb=1792, history=[])
+        ck.expect(
+            got == 1792, "RC011", cls,
+            f"with no fan-out history the policy must fall back to the "
+            f"planner's static fit (1792 MB), got {got}",
+        )
+
+
+def _check_cross_registry(ck: _Checker) -> None:
+    from repro.core.events import available_allocations
+    from repro.core.exchange import available_exchanges
+    from repro.core.graph import available_graphs
+
+    registries = {
+        "exchange": set(available_exchanges()),
+        "graph": set(available_graphs()),
+        "allocation": set(available_allocations()),
+    }
+    names = sorted(set().union(*registries.values()))
+    for n in names:
+        owners = sorted(k for k, v in registries.items() if n in v)
+        ck.checks_run += 1
+        if len(owners) > 1:
+            ck.findings.append(Finding(
+                rule="RC012", severity="info", path="<registries>", line=1,
+                message=(
+                    f"name {n!r} is registered in multiple registries "
+                    f"({', '.join(owners)}); namespaces are distinct but a "
+                    "spec string's meaning now depends on position"
+                ),
+                pass_name=PASS_NAME,
+            ))
+
+
+def contracts_pass() -> Tuple[List[Finding], int]:
+    """Run every registry contract; returns ``(findings, checks_run)``."""
+    ck = _Checker()
+    _check_exchange(ck)
+    _check_graphs(ck)
+    _check_allocations(ck)
+    _check_cross_registry(ck)
+    return ck.findings, ck.checks_run

@@ -1,0 +1,64 @@
+"""Pass 4 — docs link integrity (the old ``scripts/check_links.py``).
+
+Every relative markdown link in ``README.md`` and ``docs/*.md`` must
+resolve to an existing file. External links (http/https/mailto) and pure
+in-page anchors are skipped; a relative link's optional ``#fragment`` is
+stripped before the existence check. One ``RL001`` error per broken link,
+plus ``RL002`` if an expected markdown file itself is missing.
+"""
+from __future__ import annotations
+
+import re
+from pathlib import Path
+from typing import List, Tuple
+
+from repro.analysis.common import Finding
+
+PASS_NAME = "links"
+
+LINK_RULES = ("RL001", "RL002")
+
+# [text](target) — target up to the first closing paren / whitespace
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_markdown(md: Path, root: Path) -> List[Finding]:
+    findings: List[Finding] = []
+    text = md.read_text()
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            if not (md.parent / path).exists():
+                findings.append(Finding(
+                    rule="RL001", severity="error",
+                    path=str(md.relative_to(root)), line=lineno,
+                    message=f"broken relative link: {target}",
+                    pass_name=PASS_NAME,
+                ))
+    return findings
+
+
+def links_pass(root: Path) -> Tuple[List[Finding], int]:
+    """Check README.md + docs/*.md under ``root``; -> (findings, files)."""
+    root = Path(root)
+    files = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    findings: List[Finding] = []
+    checked = 0
+    for f in files:
+        if not f.exists():
+            findings.append(Finding(
+                rule="RL002", severity="error",
+                path=str(f.relative_to(root)), line=1,
+                message="expected markdown file is missing",
+                pass_name=PASS_NAME,
+            ))
+            continue
+        checked += 1
+        findings.extend(check_markdown(f, root))
+    return findings, checked

@@ -1,0 +1,627 @@
+"""AST lint pass — the JAX/Pallas + discrete-event pitfalls this codebase
+actually has (see docs/ANALYSIS.md for the catalog with rationale).
+
+Rules:
+
+* RA001 ``prng-key-reuse`` (error) — the same PRNG key Name consumed by two
+  ``jax.random`` sampler calls in one function without an intervening
+  reassignment / ``split`` / ``fold_in``. Reused keys silently correlate
+  "independent" randomness (quantization noise, init, attacks).
+* RA002 ``traced-branch`` (error) — Python ``if``/``while`` on a function
+  parameter inside a ``@jax.jit``-decorated function. Traced values have no
+  runtime truth value; the branch either crashes (ConcretizationTypeError)
+  or silently bakes in the tracing-time path.
+* RA003 ``unseeded-rng`` (error) — module-level ``np.random.*`` /
+  stdlib ``random.*`` draws (global, unseeded RNG state), or
+  ``np.random.default_rng()`` with no seed. Every stochastic model in this
+  repo must draw from an explicitly seeded Generator so a fixed seed fixes
+  the whole simulation.
+* RA004 ``mutable-default`` (error) — mutable default argument values
+  (shared across calls; a classic cross-epoch state-leak vector).
+* RA005 ``unordered-iteration`` (error) — iterating ``dict.values() /
+  .items() / .keys()`` or a ``set(...)`` directly (no ``sorted(...)``)
+  in ordering-sensitive modules (``mailbox.py`` / ``events.py`` /
+  ``simulate.py``): message and event ordering must not depend on
+  container insertion/hash order.
+* RA006 ``float-eq`` (warning) — ``==``/``!=`` against a nonzero float
+  literal, or between identifiers named like costs/times (``*_s``,
+  ``*_usd``, ``*time*``, ``*cost*``, ``*_bps``). Accumulated float
+  quantities compare reliably only via tolerances; exact-zero sentinel
+  checks (``== 0.0``) are exempt.
+* RA007 ``missing-classvar`` (error) — registry base classes (identified
+  by the ``name = "?"`` registration sentinel) must annotate class-level
+  contract attributes as ``ClassVar``: a plain annotation makes
+  dataclass-style tooling treat them as instance fields and hides the
+  subclass-override contract the checker in ``contracts.py`` enforces.
+* RA008 ``control-flow-assert`` (warning) — ``assert`` used for runtime
+  validation in ``repro.core`` simulation modules. ``python -O`` strips
+  asserts, so a barrier/invariant check silently disappears; raise an
+  explicit exception instead. (Kernel shape guards outside ``core`` are
+  exempt by scope.)
+* RA009 ``wallclock-in-sim`` (error) — reading the wall clock
+  (``time.time`` / ``perf_counter`` / ``monotonic`` / ``datetime.now``)
+  inside the pure discrete-event module (``events.py``): simulated time
+  must advance only through the event heap, or same-seed runs stop being
+  reproducible.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from repro.analysis.common import Finding, filter_suppressed
+
+PASS_NAME = "lint"
+
+# jax.random callees that DERIVE keys rather than consuming entropy
+_KEY_DERIVERS = frozenset(
+    {"split", "fold_in", "PRNGKey", "key", "wrap_key_data", "key_data", "clone"}
+)
+# np.random constructors that are fine (they take / carry an explicit seed)
+_NP_RANDOM_OK = frozenset(
+    {"default_rng", "Generator", "SeedSequence", "PCG64", "Philox", "MT19937"}
+)
+_WALLCLOCK_FNS = frozenset({"time", "perf_counter", "monotonic", "process_time"})
+_FLOATY_NAME = re.compile(r"(_s|_secs|_seconds|_usd|_bps)$|time|cost|price")
+
+# Module scoping: which basenames are ordering-sensitive / pure-sim / core.
+_ORDER_SENSITIVE = ("mailbox", "events", "simulate")
+_SIM_PURE = ("events",)
+
+
+def _name_of(node: ast.AST) -> Optional[str]:
+    """Terminal identifier of a Name/Attribute chain (``a.b.c`` -> ``c``)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """Full dotted path of a Name/Attribute chain, or None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class _RuleContext:
+    def __init__(self, path: str, *, order_sensitive: bool, sim_pure: bool,
+                 core_module: bool):
+        self.path = path
+        self.order_sensitive = order_sensitive
+        self.sim_pure = sim_pure
+        self.core_module = core_module
+        self.findings: List[Finding] = []
+
+    def add(self, rule: str, severity: str, node: ast.AST, message: str):
+        self.findings.append(
+            Finding(
+                rule=rule,
+                severity=severity,
+                path=self.path,
+                line=getattr(node, "lineno", 0),
+                message=message,
+                pass_name=PASS_NAME,
+            )
+        )
+
+
+# ---------------------------------------------------------------------------
+# RA001 — PRNG key reuse
+# ---------------------------------------------------------------------------
+
+
+def _stored_names(node: ast.AST) -> List[str]:
+    return [
+        t.id
+        for t in ast.walk(node)
+        if isinstance(t, ast.Name) and isinstance(t.ctx, ast.Store)
+    ]
+
+
+def _terminates(body) -> bool:
+    """True when a statement list cannot fall through to the next
+    statement (its tail is return/raise/break/continue)."""
+    return bool(body) and isinstance(
+        body[-1], (ast.Return, ast.Raise, ast.Break, ast.Continue)
+    )
+
+
+class _KeyFlow:
+    """Path-sensitive tracker of spent PRNG keys within ONE function scope.
+
+    ``if``/``try`` branches fork the spent set (exclusive paths may each
+    consume the key once); loop bodies are scanned twice so loop-carried
+    reuse (consuming the same key every iteration) is caught. Nested
+    function definitions are separate scopes and are skipped here — the
+    driver lints every def independently.
+    """
+
+    def __init__(self, ctx: _RuleContext):
+        self.ctx = ctx
+        self.reported = set()  # (line, name) dedupe across loop re-scans
+
+    def run(self, fn) -> None:
+        self._stmts(fn.body, {})
+
+    # -- expression scan ----------------------------------------------------
+    def _consumes(self, expr: ast.AST):
+        """(line, key-name) for each jax.random sampler call in ``expr``,
+        not descending into nested defs/lambdas."""
+        stack, hits = [expr], []
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.Lambda, ast.FunctionDef,
+                                 ast.AsyncFunctionDef)):
+                continue
+            stack.extend(ast.iter_child_nodes(node))
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func) or ""
+            parts = dotted.split(".")
+            is_jax_random = dotted.startswith("jax.random.") or (
+                len(parts) == 2 and parts[0] in ("jrandom", "jr")
+            )
+            if is_jax_random and parts[-1] not in _KEY_DERIVERS and node.args:
+                arg = node.args[0]
+                if isinstance(arg, ast.Name):
+                    hits.append((node.lineno, arg.id))
+        return sorted(hits)
+
+    def _eval(self, expr: ast.AST, spent: dict):
+        for line, name in self._consumes(expr):
+            if name in spent:
+                if (line, name) not in self.reported:
+                    self.reported.add((line, name))
+                    self.ctx.findings.append(Finding(
+                        rule="RA001", severity="error", path=self.ctx.path,
+                        line=line,
+                        message=(
+                            f"PRNG key {name!r} consumed again (first use "
+                            f"line {spent[name]}) without split/fold_in — "
+                            f"correlated randomness"
+                        ),
+                        pass_name=PASS_NAME,
+                    ))
+            else:
+                spent[name] = line
+
+    # -- statement interpretation -------------------------------------------
+    def _stmts(self, body, spent: dict):
+        for stmt in body:
+            self._stmt(stmt, spent)
+
+    def _stmt(self, stmt, spent: dict):
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return  # separate scope; linted independently
+        if isinstance(stmt, ast.If):
+            self._eval(stmt.test, spent)
+            a, b = dict(spent), dict(spent)
+            self._stmts(stmt.body, a)
+            self._stmts(stmt.orelse, b)
+            # conservative join — but a branch that cannot fall through
+            # (return/raise/break/continue) never reaches the code after
+            # the if, so its spends don't propagate
+            spent.clear()
+            if _terminates(stmt.body) and not _terminates(stmt.orelse):
+                spent.update(b)
+            elif _terminates(stmt.orelse) and not _terminates(stmt.body):
+                spent.update(a)
+            else:
+                spent.update({**a, **b})
+            return
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._eval(stmt.iter, spent)
+            for n in _stored_names(stmt.target):
+                spent.pop(n, None)
+            # two passes: the second catches loop-carried key reuse
+            self._stmts(stmt.body, spent)
+            for n in _stored_names(stmt.target):
+                spent.pop(n, None)
+            self._stmts(stmt.body, spent)
+            self._stmts(stmt.orelse, spent)
+            return
+        if isinstance(stmt, ast.While):
+            self._eval(stmt.test, spent)
+            self._stmts(stmt.body, spent)
+            self._stmts(stmt.body, spent)
+            self._stmts(stmt.orelse, spent)
+            return
+        if isinstance(stmt, ast.Try):
+            a = dict(spent)
+            self._stmts(stmt.body, a)
+            merged = dict(a)
+            for handler in stmt.handlers:
+                h = dict(spent)
+                self._stmts(handler.body, h)
+                merged.update(h)
+            self._stmts(stmt.orelse, merged)
+            self._stmts(stmt.finalbody, merged)
+            spent.clear()
+            spent.update(merged)
+            return
+        if isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self._eval(item.context_expr, spent)
+            self._stmts(stmt.body, spent)
+            return
+        # straight-line statement: evaluate value exprs, then clear stores
+        for expr in ast.iter_child_nodes(stmt):
+            self._eval(expr, spent)
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign,
+                             ast.NamedExpr)):
+            for n in _stored_names(stmt):
+                spent.pop(n, None)
+
+
+def _check_key_reuse(fn: ast.AST, ctx: _RuleContext):
+    _KeyFlow(ctx).run(fn)
+
+
+# ---------------------------------------------------------------------------
+# RA002 — Python branch on traced value inside jit
+# ---------------------------------------------------------------------------
+
+
+def _is_jit_decorated(fn) -> bool:
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        dotted = _dotted(target) or ""
+        if dotted in ("jax.jit", "jit", "jax.pmap", "pmap"):
+            return True
+        # functools.partial(jax.jit, ...)
+        if isinstance(dec, ast.Call) and dotted.endswith("partial") and dec.args:
+            inner = _dotted(dec.args[0]) or ""
+            if inner in ("jax.jit", "jit"):
+                return True
+    return False
+
+
+def _check_traced_branch(fn, ctx: _RuleContext):
+    if not _is_jit_decorated(fn):
+        return
+    params = {a.arg for a in fn.args.args + fn.args.kwonlyargs}
+    params.discard("self")
+
+    def traced_names(test: ast.AST) -> List[str]:
+        hits = []
+        for node in ast.walk(test):
+            if isinstance(node, ast.Attribute):
+                # x.shape / x.dtype / cfg.field are static at trace time —
+                # drop the whole chain, including its root Name
+                continue
+            if isinstance(node, ast.Compare) and any(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops
+            ):
+                return []  # `x is None` guards are static
+            if isinstance(node, ast.Name) and node.id in params:
+                hits.append(node.id)
+        # remove names that only appear as attribute roots
+        attr_roots = {
+            n.value.id
+            for n in ast.walk(test)
+            if isinstance(n, ast.Attribute) and isinstance(n.value, ast.Name)
+        }
+        return [h for h in hits if h not in attr_roots]
+
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.If, ast.While)):
+            names = traced_names(node.test)
+            if names:
+                ctx.add(
+                    "RA002", "error", node,
+                    f"Python {'while' if isinstance(node, ast.While) else 'if'} "
+                    f"on traced value(s) {sorted(set(names))} inside a "
+                    f"jit-compiled function — use lax.cond/select or hoist "
+                    f"the branch out of the traced region",
+                )
+
+
+# ---------------------------------------------------------------------------
+# RA003 — unseeded global RNG
+# ---------------------------------------------------------------------------
+
+
+def _check_unseeded_rng(tree: ast.AST, ctx: _RuleContext):
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func) or ""
+        parts = dotted.split(".")
+        if len(parts) == 3 and parts[0] in ("np", "numpy") and parts[1] == "random":
+            fn = parts[2]
+            if fn == "default_rng" and not node.args and not node.keywords:
+                ctx.add(
+                    "RA003", "error", node,
+                    "np.random.default_rng() without a seed — pass an explicit "
+                    "seed so the simulation is reproducible",
+                )
+            elif fn not in _NP_RANDOM_OK:
+                ctx.add(
+                    "RA003", "error", node,
+                    f"np.random.{fn} draws from the unseeded GLOBAL numpy RNG; "
+                    f"thread a seeded np.random.default_rng(seed) Generator "
+                    f"instead",
+                )
+        elif len(parts) == 2 and parts[0] == "random" and parts[1] not in (
+            "Random", "SystemRandom"
+        ):
+            ctx.add(
+                "RA003", "error", node,
+                f"stdlib random.{parts[1]} uses global unseeded RNG state; "
+                f"use a seeded random.Random(seed) or numpy Generator",
+            )
+
+
+# ---------------------------------------------------------------------------
+# RA004 — mutable default arguments
+# ---------------------------------------------------------------------------
+
+_MUTABLE_CALLS = frozenset({"list", "dict", "set", "bytearray", "defaultdict", "deque"})
+
+
+def _check_mutable_default(fn, ctx: _RuleContext):
+    defaults = list(fn.args.defaults) + [
+        d for d in fn.args.kw_defaults if d is not None
+    ]
+    for d in defaults:
+        bad = isinstance(d, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                             ast.DictComp, ast.SetComp))
+        if isinstance(d, ast.Call):
+            bad = bad or (_name_of(d.func) in _MUTABLE_CALLS)
+        if bad:
+            ctx.add(
+                "RA004", "error", d,
+                f"mutable default argument in {fn.name}() is shared across "
+                f"calls — default to None and construct inside the body",
+            )
+
+
+# ---------------------------------------------------------------------------
+# RA005 — unordered dict/set iteration in ordering-sensitive modules
+# ---------------------------------------------------------------------------
+
+
+def _iter_sites(tree: ast.AST):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            yield node.iter
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            for gen in node.generators:
+                yield gen.iter
+
+
+def _check_unordered_iteration(tree: ast.AST, ctx: _RuleContext):
+    if not ctx.order_sensitive:
+        return
+    for it in _iter_sites(tree):
+        if isinstance(it, ast.Call):
+            callee = it.func
+            if isinstance(callee, ast.Attribute) and callee.attr in (
+                "values", "items", "keys"
+            ) and not it.args:
+                ctx.add(
+                    "RA005", "error", it,
+                    f"iteration over .{callee.attr}() in an ordering-sensitive "
+                    f"module depends on dict insertion order — iterate "
+                    f"sorted(...) so message/event order is explicit",
+                )
+            elif _name_of(callee) == "set":
+                ctx.add(
+                    "RA005", "error", it,
+                    "iteration over a set in an ordering-sensitive module is "
+                    "hash-order dependent — iterate sorted(...) instead",
+                )
+
+
+# ---------------------------------------------------------------------------
+# RA006 — float == on costs/times
+# ---------------------------------------------------------------------------
+
+
+def _floaty(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, float):
+        return None if node.value == 0.0 else f"float literal {node.value!r}"
+    name = _name_of(node)
+    if name and _FLOATY_NAME.search(name):
+        return f"cost/time-named value {name!r}"
+    return None
+
+
+def _check_float_eq(tree: ast.AST, ctx: _RuleContext):
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Compare):
+            continue
+        if not any(isinstance(op, (ast.Eq, ast.NotEq)) for op in node.ops):
+            continue
+        sides = [node.left, *node.comparators]
+        if any(
+            isinstance(s, ast.Constant) and isinstance(s.value, (str, bytes, bool))
+            or (isinstance(s, ast.Constant) and s.value is None)
+            for s in sides
+        ):
+            continue  # string/None/bool sentinel comparisons are not float math
+        if any(
+            isinstance(s, ast.Constant) and isinstance(s.value, float)
+            and s.value == 0.0
+            for s in sides
+        ):
+            continue  # exact-zero sentinel ("never set") checks are exempt
+        for side in sides:
+            why = _floaty(side)
+            if why:
+                ctx.add(
+                    "RA006", "warning", node,
+                    f"exact ==/!= against {why}; accumulated float "
+                    f"costs/times need a tolerance (math.isclose / abs diff)",
+                )
+                break
+
+
+# ---------------------------------------------------------------------------
+# RA007 — registry contract attributes must be ClassVar
+# ---------------------------------------------------------------------------
+
+
+def _is_registry_base(cls: ast.ClassDef) -> bool:
+    """The codebase convention: registry bases carry ``name = "?"`` which
+    the @register_* decorator overwrites."""
+    for stmt in cls.body:
+        target = None
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name):
+            target, value = stmt.target.id, stmt.value
+        elif isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 and isinstance(
+            stmt.targets[0], ast.Name
+        ):
+            target, value = stmt.targets[0].id, stmt.value
+        if target == "name" and isinstance(value, ast.Constant) and value.value == "?":
+            return True
+    return False
+
+
+def _check_missing_classvar(tree: ast.AST, ctx: _RuleContext):
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef) or not _is_registry_base(cls):
+            continue
+        for stmt in cls.body:
+            if not (isinstance(stmt, ast.AnnAssign) and stmt.value is not None
+                    and isinstance(stmt.target, ast.Name)):
+                continue
+            ann = ast.unparse(stmt.annotation)
+            if "ClassVar" not in ann:
+                ctx.add(
+                    "RA007", "error", stmt,
+                    f"registry base {cls.name}.{stmt.target.id} is a "
+                    f"class-level contract attribute — annotate it "
+                    f"ClassVar[{ann}] so instance shadowing is a type error "
+                    f"and the contract checker can enumerate it",
+                )
+
+
+# ---------------------------------------------------------------------------
+# RA008 — control-flow asserts in core simulation modules
+# ---------------------------------------------------------------------------
+
+
+def _check_control_flow_assert(tree: ast.AST, ctx: _RuleContext):
+    if not ctx.core_module:
+        return
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assert):
+            ctx.add(
+                "RA008", "warning", node,
+                "assert used as a runtime invariant in a core simulation "
+                "module — python -O strips it; raise ValueError/RuntimeError "
+                "explicitly",
+            )
+
+
+# ---------------------------------------------------------------------------
+# RA009 — wall clock reads inside the pure discrete-event module
+# ---------------------------------------------------------------------------
+
+
+def _check_wallclock(tree: ast.AST, ctx: _RuleContext):
+    if not ctx.sim_pure:
+        return
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = _dotted(node.func) or ""
+        parts = dotted.split(".")
+        if (len(parts) == 2 and parts[0] == "time" and parts[1] in _WALLCLOCK_FNS) or (
+            dotted in ("datetime.now", "datetime.datetime.now", "datetime.utcnow")
+        ):
+            ctx.add(
+                "RA009", "error", node,
+                f"{dotted}() reads the wall clock inside the discrete-event "
+                f"module — simulated time must advance only via the event "
+                f"heap or same-seed runs diverge",
+            )
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+ALL_RULES = (
+    "RA001", "RA002", "RA003", "RA004", "RA005", "RA006", "RA007", "RA008",
+    "RA009",
+)
+
+
+def lint_source(
+    source: str,
+    path: str = "<string>",
+    *,
+    order_sensitive: Optional[bool] = None,
+    sim_pure: Optional[bool] = None,
+    core_module: Optional[bool] = None,
+) -> List[Finding]:
+    """Lint one module's source. Scope flags default from the basename:
+    ordering rules fire for mailbox/events/simulate modules, the wall-clock
+    rule for events modules, the assert rule for ``repro/core`` files."""
+    basename = Path(path).name
+    posix = Path(path).as_posix()
+    if order_sensitive is None:
+        order_sensitive = any(tag in basename for tag in _ORDER_SENSITIVE)
+    if sim_pure is None:
+        sim_pure = any(tag in basename for tag in _SIM_PURE)
+    if core_module is None:
+        core_module = "/core/" in posix or "core_" in basename
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Finding("RA000", "error", path, e.lineno or 0,
+                        f"syntax error: {e.msg}", PASS_NAME)]
+    ctx = _RuleContext(
+        path, order_sensitive=order_sensitive, sim_pure=sim_pure,
+        core_module=core_module,
+    )
+    _check_unseeded_rng(tree, ctx)
+    _check_unordered_iteration(tree, ctx)
+    _check_float_eq(tree, ctx)
+    _check_missing_classvar(tree, ctx)
+    _check_control_flow_assert(tree, ctx)
+    _check_wallclock(tree, ctx)
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            _check_key_reuse(node, ctx)
+            _check_traced_branch(node, ctx)
+            _check_mutable_default(node, ctx)
+    return filter_suppressed(ctx.findings, source.splitlines())
+
+
+def lint_file(path: Path, root: Optional[Path] = None, **scopes) -> List[Finding]:
+    path = Path(path)
+    rel = str(path.relative_to(root)) if root else str(path)
+    findings = lint_source(path.read_text(), rel, **scopes)
+    # re-anchor pseudo-paths produced by lint_source onto the relative path
+    return [
+        Finding(f.rule, f.severity, rel, f.line, f.message, f.pass_name)
+        for f in findings
+    ]
+
+
+def lint_paths(paths: Sequence[Path], root: Optional[Path] = None):
+    """Lint every ``*.py`` under the given files/directories.
+
+    Returns ``(findings, files_scanned)``.
+    """
+    files: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        files.extend(sorted(p.rglob("*.py")) if p.is_dir() else [p])
+    findings: List[Finding] = []
+    for f in files:
+        findings.extend(lint_file(f, root))
+    return findings, len(files)

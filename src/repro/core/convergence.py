@@ -25,7 +25,8 @@ class ReduceLROnPlateau:
         threshold: float = 1e-4,
         min_lr: float = 1e-6,
     ):
-        assert mode in ("min", "max")
+        if mode not in ("min", "max"):
+            raise ValueError(f"mode must be 'min' or 'max', got {mode!r}")
         self.lr = lr
         self.mode = mode
         self.factor = factor
@@ -66,7 +67,8 @@ class ReduceLROnPlateau:
 
 class EarlyStopping:
     def __init__(self, *, mode: str = "min", patience: int = 5, min_delta: float = 0.0):
-        assert mode in ("min", "max")
+        if mode not in ("min", "max"):
+            raise ValueError(f"mode must be 'min' or 'max', got {mode!r}")
         self.mode = mode
         self.patience = patience
         self.min_delta = min_delta

@@ -39,7 +39,7 @@ import heapq
 import math
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Type
+from typing import Any, Callable, ClassVar, Dict, List, Optional, Sequence, Tuple, Type
 
 import numpy as np
 
@@ -58,16 +58,33 @@ class EventEngine:
     the whole simulation.
     """
 
-    def __init__(self, *, seed: int = 0, rng: Optional[np.random.Generator] = None):
+    def __init__(
+        self,
+        *,
+        seed: int = 0,
+        rng: Optional[np.random.Generator] = None,
+        tracer: Optional[Any] = None,
+    ):
         self.now = 0.0
         self.processed = 0
         self.rng = rng if rng is not None else np.random.default_rng(seed)
+        # Optional repro.analysis.trace.TraceRecorder: records every
+        # schedule/fire for the happens-before / determinism checkers.
+        # None (the default) keeps the hot loop allocation-free.
+        self.tracer = tracer
+        if tracer is not None:
+            tracer.record("engine", time=self.now, seeded=True)
         self._heap: List[Tuple[float, int, int, Callable[[], None]]] = []
         self._seq = 0
 
     def schedule_at(self, time: float, fn: Callable[[], None], *, priority: int = 0):
         """Schedule ``fn`` at absolute ``time`` (clamped to not run in the past)."""
-        heapq.heappush(self._heap, (max(float(time), self.now), priority, self._seq, fn))
+        t = max(float(time), self.now)
+        if self.tracer is not None:
+            self.tracer.record(
+                "schedule", time=self.now, at=t, priority=priority, seq=self._seq
+            )
+        heapq.heappush(self._heap, (t, priority, self._seq, fn))
         self._seq += 1
 
     def schedule_in(self, delay: float, fn: Callable[[], None], *, priority: int = 0):
@@ -82,9 +99,11 @@ class EventEngine:
     def run(self) -> float:
         """Process events until the heap drains; returns the final clock."""
         while self._heap:
-            t, _, _, fn = heapq.heappop(self._heap)
+            t, prio, seq, fn = heapq.heappop(self._heap)
             self.now = t
             self.processed += 1
+            if self.tracer is not None:
+                self.tracer.record("fire", time=t, priority=prio, seq=seq)
             fn()
         return self.now
 
@@ -337,10 +356,13 @@ class ServerlessRuntime:
     trajectory deterministic.
     """
 
-    def __init__(self, config: Optional[RuntimeConfig] = None):
+    def __init__(
+        self, config: Optional[RuntimeConfig] = None, *, tracer: Optional[Any] = None
+    ):
         self.config = config or RuntimeConfig()
         self.rng = np.random.default_rng(self.config.seed)
         self.pool = _ContainerPool(self.config.container_keepalive_s)
+        self.tracer = tracer  # optional repro.analysis.trace.TraceRecorder
         self.fanouts_run = 0
         self.clock = 0.0  # deployment-lifetime clock; warm pools live on it
 
@@ -371,7 +393,7 @@ class ServerlessRuntime:
         cfg = self.config
         if submit_time is None:
             submit_time = self.clock
-        engine = EventEngine(rng=self.rng)
+        engine = EventEngine(rng=self.rng, tracer=self.tracer)
         engine.now = float(submit_time)
         key = (function_key, int(memory_mb))
         records = [
@@ -471,6 +493,14 @@ class ServerlessRuntime:
         engine.run()
         self.fanouts_run += 1
         self.clock = max(self.clock, state["last_end"])
+        if self.tracer is not None:
+            self.tracer.record(
+                "fanout",
+                time=state["last_end"],
+                invocations=len(records),
+                cold_starts=sum(r.cold_starts for r in records),
+                retries=sum(r.retries for r in records),
+            )
         return FanoutResult(
             makespan_s=state["last_end"] - submit_time,
             memory_mb=int(memory_mb),
@@ -495,7 +525,7 @@ class AllocationPolicy(abc.ABC):
     paper's headline time/cost trade-off.
     """
 
-    name: str = "?"  # set by @register_allocation
+    name: ClassVar[str] = "?"  # set by @register_allocation
 
     @abc.abstractmethod
     def memory_mb(

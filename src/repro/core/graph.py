@@ -34,7 +34,7 @@ the resolved graph is ``full``.
 from __future__ import annotations
 
 import abc
-from typing import Dict, List, Optional, Sequence, Tuple, Type
+from typing import ClassVar, Dict, List, Optional, Sequence, Tuple, Type
 
 import numpy as np
 
@@ -48,7 +48,7 @@ class PeerGraph(abc.ABC):
     (neighbors, mixing matrix, diagnostics) derives from it.
     """
 
-    name: str = "?"  # set by @register_graph
+    name: ClassVar[str] = "?"  # set by @register_graph
 
     def __init__(self, num_peers: int):
         if num_peers < 1:
@@ -207,7 +207,17 @@ def get_graph(spec, num_peers: int, *, seed: int = 0) -> PeerGraph:
             raise ValueError(
                 f"graph spec {spec!r}: parameter after ':' must be an int"
             ) from None
-    return cls(num_peers, seed=seed, **kwargs)
+    try:
+        return cls(num_peers, seed=seed, **kwargs)
+    except TypeError:
+        # mirror get_exchange: an un-parameterized graph given a ':' arg is
+        # a clean spec error, not a constructor-signature leak
+        if kwargs:
+            raise ValueError(
+                f"peer graph {name!r} does not take a ':' parameter "
+                f"(got {spec!r})"
+            ) from None
+        raise
 
 
 # ---------------------------------------------------------------------------

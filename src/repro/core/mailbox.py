@@ -57,11 +57,16 @@ class HostMailbox:
     """
 
     def __init__(
-        self, num_peers: int, *, s3_rtt_s: float = S3_ROUND_TRIP_S, graph=None
+        self, num_peers: int, *, s3_rtt_s: float = S3_ROUND_TRIP_S, graph=None,
+        tracer=None,
     ):
         self.num_peers = num_peers
         self.s3_rtt_s = s3_rtt_s
         self.graph = graph
+        # Optional repro.analysis.trace.TraceRecorder: every publish/consume
+        # is recorded for the happens-before race checker and the same-seed
+        # determinism differ. None keeps the broker overhead-free.
+        self.tracer = tracer
         # (peer, shard) -> latest message; shard=None is the classic
         # whole-gradient register
         self._queues: Dict[Tuple[int, Any], Message] = {}
@@ -99,6 +104,11 @@ class HostMailbox:
         self.stats["publishes"] += 1
         if via_s3:
             self.stats["s3_indirections"] += 1
+        if self.tracer is not None:
+            self.tracer.record(
+                "publish", time=time, actor=peer, epoch=epoch, shard=shard,
+                nbytes=nbytes, replaced_epoch=None if prev is None else prev.epoch,
+            )
 
     @property
     def live_messages(self) -> int:
@@ -145,15 +155,29 @@ class HostMailbox:
             and not self.graph.adjacency[consumer, peer]
         ):
             self.stats["blocked"] += 1
+            if self.tracer is not None:
+                self.tracer.record(
+                    "blocked", time=at_time, actor=consumer, peer=peer,
+                    shard=shard,
+                )
             return None
         msg = self._queues.get((peer, shard))
         self.stats["consumes"] += 1
-        if msg is None:
+        if msg is None or (at_time is not None and msg.publish_time > at_time):
+            # nothing in the register, or not yet published at this
+            # simulated time — either way the consumer sees a miss
+            if self.tracer is not None:
+                self.tracer.record(
+                    "miss", time=at_time, actor=consumer, peer=peer, shard=shard,
+                )
             return None
-        if at_time is not None and msg.publish_time > at_time:
-            return None  # not yet published at this simulated time
         if consumer is not None:
             self.delivered_edges.add((consumer, peer))
+        if self.tracer is not None:
+            self.tracer.record(
+                "consume", time=at_time, actor=consumer, peer=peer, shard=shard,
+                epoch=msg.epoch, published=msg.publish_time,
+            )
         return msg
 
     # -- synchronization barrier (paper §III-B.6) ---------------------------

@@ -217,7 +217,10 @@ class ServerlessExecutor:
         allocation: Union[str, AllocationPolicy] = "static",
         instance_config: Union[InstanceConfig, InstanceRuntime, None] = None,
     ):
-        assert backend in ("serverless", "instance")
+        if backend not in ("serverless", "instance"):
+            raise ValueError(
+                f"backend must be 'serverless' or 'instance', got {backend!r}"
+            )
         self.backend = backend
         self.planner = planner or ServerlessPlanner()
         self.instance = instance

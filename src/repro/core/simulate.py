@@ -107,6 +107,8 @@ class LocalP2PCluster:
         krum_m: int = 1,  # multi-Krum default (spec param overrides)
         krum_f: Optional[int] = None,  # Krum's assumed Byzantine count
         robust_clip: float = 0.0,  # per-contribution norm clip, 0 = off
+        sim_compute_s: Optional[Any] = None,  # float | callable(rank, epoch)
+        tracer: Any = None,  # repro.analysis.trace.TraceRecorder, optional
         seed: int = 0,
     ):
         import dataclasses as _dc
@@ -200,7 +202,14 @@ class LocalP2PCluster:
         )
         self.bw = network_bandwidth_bps
         self.link = LinkModel(bandwidth_bps=network_bandwidth_bps)
-        self.mailbox = HostMailbox(num_peers, graph=self.graph)
+        # Deterministic virtual compute time. The async clock normally
+        # advances by MEASURED wall time x speed, which varies run to run;
+        # sim_compute_s (a constant, or callable(rank, epoch) -> seconds)
+        # replaces the measurement so same-seed traces are bit-identical —
+        # required by the repro.analysis.trace double-run differ.
+        self.sim_compute_s = sim_compute_s
+        self.tracer = tracer
+        self.mailbox = HostMailbox(num_peers, graph=self.graph, tracer=tracer)
         self.detector = ConvergenceDetector(lr, mode="max", max_epochs=10_000)
         self.key = jax.random.PRNGKey(seed)
         self.churn_prob = churn_prob
@@ -286,7 +295,7 @@ class LocalP2PCluster:
         """ComputeBatchGradients + AverageBatchesGradients (Algorithm 1)."""
         thunks, batches = self._batch_thunks(peer, epoch)
         batch_bytes = sum(
-            sum(np.asarray(v).nbytes for v in b.values()) for b in batches
+            sum(np.asarray(b[k]).nbytes for k in sorted(b)) for b in batches
         ) // max(len(batches), 1)
 
         def combine(outs):
@@ -322,6 +331,11 @@ class LocalP2PCluster:
             outs = [t() for t in thunks]
             g, loss, acc = combine(outs)
             compute_wall = time.perf_counter() - t0
+        if self.sim_compute_s is not None:
+            compute_wall = float(
+                self.sim_compute_s(peer.rank, epoch)
+                if callable(self.sim_compute_s) else self.sim_compute_s
+            )
         peer.compute_time_s += compute_wall
         return g, loss, acc, compute_wall
 
@@ -635,7 +649,11 @@ class LocalP2PCluster:
                 # of the published payload under EF, the raw gradient else
                 grads[peer.rank] = self._publish(peer, g, epoch, at_time=0.0)
             self.mailbox.barrier_signal(peer.rank, epoch)
-        assert self.mailbox.barrier_complete(epoch)  # SynchronisationBarrier
+        if not self.mailbox.barrier_complete(epoch):  # SynchronisationBarrier
+            raise RuntimeError(
+                f"synchronisation barrier incomplete for epoch {epoch}: not "
+                f"every peer signalled completion before the consume phase"
+            )
         self.mailbox.barrier_reset(epoch)
         if sharded:
             self._sharded_exchange_sync(grads, epoch)
@@ -656,7 +674,7 @@ class LocalP2PCluster:
         rejoins ``churn_downtime_s`` later and redoes the step, while other
         peers keep consuming its last published (stale) gradient.
         """
-        engine = EventEngine(rng=self._rng)
+        engine = EventEngine(rng=self._rng, tracer=self.tracer)
         engine.now = min((p.clock for p in self.peers), default=0.0)
         stats = []
         order = self.last_event_order = []

@@ -1,0 +1,8 @@
+"""Planted RA001: the same key feeds two samplers without a split."""
+import jax
+
+
+def sample_pair(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))  # key already spent on line above
+    return a + b

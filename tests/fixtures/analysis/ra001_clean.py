@@ -1,0 +1,17 @@
+"""Clean twin of ra001_bad: every sampler gets a freshly split key."""
+import jax
+
+
+def sample_pair(key):
+    key, k1 = jax.random.split(key)
+    a = jax.random.normal(k1, (4,))
+    key, k2 = jax.random.split(key)
+    b = jax.random.uniform(k2, (4,))
+    return a + b
+
+
+def sample_branches(key, flag):
+    # exclusive if/else arms may each consume the key once
+    if flag:
+        return jax.random.normal(key, (4,))
+    return jax.random.uniform(key, (4,))

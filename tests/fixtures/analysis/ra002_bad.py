@@ -1,0 +1,17 @@
+"""Planted RA002: Python control flow on a traced parameter inside jit."""
+import jax
+
+
+@jax.jit
+def step(x, flag):
+    if flag:  # traced value has no runtime truth value
+        return x + 1
+    return x - 1
+
+
+@jax.jit
+def drain(x, n):
+    while n:  # traced loop condition
+        x = x * 0.5
+        n = n - 1
+    return x

@@ -1,0 +1,28 @@
+"""Clean twin of ra002_bad: static attributes / None-guards / lax.cond."""
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@jax.jit
+def step(x, flag):
+    return jnp.where(flag, x + 1, x - 1)
+
+
+@jax.jit
+def maybe_scale(x, scale=None):
+    if scale is None:  # `is None` guards are static at trace time
+        return x
+    return x * scale
+
+
+@jax.jit
+def by_shape(x):
+    if x.shape[0] > 4:  # shapes are static at trace time
+        return x[:4]
+    return x
+
+
+@jax.jit
+def cond_step(x, flag):
+    return lax.cond(flag, lambda v: v + 1, lambda v: v - 1, x)

@@ -1,0 +1,14 @@
+"""Planted RA003: global / unseeded RNG draws."""
+import random
+
+import numpy as np
+
+JITTER = np.random.rand(4)  # module-level draw from the global numpy RNG
+
+
+def make_rng():
+    return np.random.default_rng()  # seedless Generator
+
+
+def pick(items):
+    return random.choice(items)  # stdlib global RNG state

@@ -1,0 +1,16 @@
+"""Clean twin of ra003_bad: every stream carries an explicit seed."""
+import random
+
+import numpy as np
+
+
+def make_rng(seed: int):
+    return np.random.default_rng(seed)
+
+
+def jitter(seed: int):
+    return np.random.default_rng(seed).random(4)
+
+
+def pick(items, seed: int):
+    return random.Random(seed).choice(items)

@@ -1,0 +1,12 @@
+"""Planted RA004: mutable default arguments shared across calls."""
+from collections import defaultdict
+
+
+def record(value, history=[]):
+    history.append(value)
+    return history
+
+
+def index(key, table=defaultdict(list), weights={}):
+    table[key].append(weights)
+    return table

@@ -1,0 +1,16 @@
+"""Clean twin of ra004_bad: None defaults, containers built per call."""
+from collections import defaultdict
+
+
+def record(value, history=None):
+    if history is None:
+        history = []
+    history.append(value)
+    return history
+
+
+def index(key, table=None, weights=None):
+    table = defaultdict(list) if table is None else table
+    weights = {} if weights is None else weights
+    table[key].append(weights)
+    return table

@@ -1,0 +1,12 @@
+"""Planted RA005: unordered container iteration feeding message order."""
+
+
+def drain(queues: dict):
+    out = []
+    for msg in queues.values():  # dict insertion order decides delivery
+        out.append(msg)
+    return out
+
+
+def fanout(peers):
+    return [p for p in set(peers)]  # hash order decides fan-out order

@@ -1,0 +1,12 @@
+"""Clean twin of ra005_bad_mailbox: explicit sorted order everywhere."""
+
+
+def drain(queues: dict):
+    out = []
+    for key in sorted(queues):
+        out.append(queues[key])
+    return out
+
+
+def fanout(peers):
+    return [p for p in sorted(set(peers))]

@@ -1,0 +1,9 @@
+"""Planted RA006: exact float equality on cost/time quantities."""
+
+
+def same_cost(total_cost_usd, quote_usd):
+    return total_cost_usd == quote_usd
+
+
+def is_warm(elapsed_s):
+    return elapsed_s != 1.5

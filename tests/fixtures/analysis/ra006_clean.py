@@ -1,0 +1,14 @@
+"""Clean twin of ra006_bad: tolerances, zero sentinels, string compares."""
+import math
+
+
+def same_cost(total_cost_usd, quote_usd):
+    return math.isclose(total_cost_usd, quote_usd, rel_tol=1e-9)
+
+
+def is_free(total_cost_usd):
+    return total_cost_usd == 0.0  # exact-zero sentinel is exempt
+
+
+def is_aws(runtime_preset):
+    return runtime_preset == "aws"  # string compare, not float math

@@ -1,0 +1,10 @@
+"""Planted RA007: registry base with un-ClassVar'd contract attributes."""
+
+
+class Protocol:
+    name = "?"  # registration sentinel marks this as a registry base
+    is_async: bool = False
+    lossy: bool = False
+
+    def combine(self, grads):
+        raise NotImplementedError

@@ -1,0 +1,11 @@
+"""Clean twin of ra007_bad: contract attributes annotated ClassVar."""
+from typing import ClassVar
+
+
+class Protocol:
+    name: ClassVar[str] = "?"  # registration sentinel
+    is_async: ClassVar[bool] = False
+    lossy: ClassVar[bool] = False
+
+    def combine(self, grads):
+        raise NotImplementedError

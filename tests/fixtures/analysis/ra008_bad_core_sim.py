@@ -1,0 +1,6 @@
+"""Planted RA008: assert as a runtime invariant in a core sim module."""
+
+
+def barrier_check(done: int, total: int):
+    assert done == total, "barrier incomplete"  # stripped under python -O
+    return True

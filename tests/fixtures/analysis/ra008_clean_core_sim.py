@@ -1,0 +1,7 @@
+"""Clean twin of ra008_bad_core_sim: explicit exception survives -O."""
+
+
+def barrier_check(done: int, total: int):
+    if done != total:
+        raise RuntimeError(f"barrier incomplete: {done}/{total} peers signalled")
+    return True

@@ -1,0 +1,8 @@
+"""Planted RA009: wall-clock reads inside the discrete-event module."""
+import time
+from datetime import datetime
+
+
+def advance(engine):
+    engine.now = time.perf_counter()  # real wall time leaks into sim time
+    return datetime.now()

@@ -1,0 +1,9 @@
+"""Clean twin of ra009_bad_events: time advances only via the heap."""
+import heapq
+
+
+def advance(engine):
+    t, prio, seq, fn = heapq.heappop(engine.heap)
+    engine.now = t
+    fn()
+    return engine.now

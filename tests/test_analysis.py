@@ -1,0 +1,403 @@
+"""Tests for the repro.analysis suite: planted-violation fixtures, registry
+contract checks, trace race/determinism checks, link integrity, the CLI,
+and regression tests for the real violations the suite found (and PR 8
+fixed) in src/repro."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Report, find_root, run_analysis
+from repro.analysis.common import Finding, filter_suppressed
+from repro.analysis.contracts import contracts_pass
+from repro.analysis.links import links_pass
+from repro.analysis.lint import ALL_RULES, lint_file, lint_paths, lint_source
+from repro.analysis.trace import (
+    TraceRecorder, check_trace, diff_runs, _run_serverless,
+)
+
+ROOT = Path(__file__).resolve().parents[1]
+FIXTURES = ROOT / "tests" / "fixtures" / "analysis"
+
+# rule -> (bad fixture, clean twin, explicit scope overrides)
+FIXTURE_PAIRS = {
+    "RA001": ("ra001_bad.py", "ra001_clean.py", {}),
+    "RA002": ("ra002_bad.py", "ra002_clean.py", {}),
+    "RA003": ("ra003_bad.py", "ra003_clean.py", {}),
+    "RA004": ("ra004_bad.py", "ra004_clean.py", {}),
+    "RA005": (
+        "ra005_bad_mailbox.py", "ra005_clean_mailbox.py",
+        {"order_sensitive": True},
+    ),
+    "RA006": ("ra006_bad.py", "ra006_clean.py", {}),
+    "RA007": ("ra007_bad.py", "ra007_clean.py", {}),
+    "RA008": (
+        "ra008_bad_core_sim.py", "ra008_clean_core_sim.py",
+        {"core_module": True},
+    ),
+    "RA009": ("ra009_bad_events.py", "ra009_clean_events.py", {"sim_pure": True}),
+}
+
+
+# ---------------------------------------------------------------------------
+# lint pass — every rule catches its planted fixture, passes the clean twin
+# ---------------------------------------------------------------------------
+
+
+def test_every_rule_has_a_fixture_pair():
+    assert set(FIXTURE_PAIRS) == set(ALL_RULES)
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURE_PAIRS))
+def test_rule_catches_planted_fixture(rule):
+    bad, _, scopes = FIXTURE_PAIRS[rule]
+    findings = lint_file(FIXTURES / bad, ROOT, **scopes)
+    assert any(f.rule == rule for f in findings), (
+        f"{rule} missed its planted fixture {bad}: {findings}"
+    )
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURE_PAIRS))
+def test_rule_passes_clean_twin(rule):
+    _, clean, scopes = FIXTURE_PAIRS[rule]
+    findings = lint_file(FIXTURES / clean, ROOT, **scopes)
+    assert findings == [], f"clean twin {clean} was flagged: {findings}"
+
+
+def test_scope_defaults_derive_from_basename():
+    # the *_mailbox / *_events / *_core_sim fixture names trigger their
+    # scoped rules without explicit overrides
+    assert any(
+        f.rule == "RA005"
+        for f in lint_file(FIXTURES / "ra005_bad_mailbox.py", ROOT)
+    )
+    assert any(
+        f.rule == "RA009"
+        for f in lint_file(FIXTURES / "ra009_bad_events.py", ROOT)
+    )
+    # outside an order-sensitive module the same code is fine
+    source = (FIXTURES / "ra005_bad_mailbox.py").read_text()
+    assert lint_source(source, "helpers.py") == []
+
+
+def test_noqa_suppression():
+    src = "import jax\n\ndef f(key):\n    a = jax.random.normal(key, (2,))\n    b = jax.random.normal(key, (2,))  # noqa: RA001\n    return a + b\n"
+    assert lint_source(src, "mod.py") == []
+    src_ignored = src.replace("# noqa: RA001", "# analysis: ignore[RA001]")
+    assert lint_source(src_ignored, "mod.py") == []
+    src_star = src.replace("# noqa: RA001", "# noqa: *")
+    assert lint_source(src_star, "mod.py") == []
+    # an unrelated rule id does NOT silence it
+    src_wrong = src.replace("# noqa: RA001", "# noqa: RA004")
+    assert any(f.rule == "RA001" for f in lint_source(src_wrong, "mod.py"))
+
+
+def test_key_reuse_is_path_sensitive():
+    # exclusive branches may each consume the key once
+    src = (
+        "import jax\n"
+        "def f(key, flag):\n"
+        "    if flag:\n"
+        "        return jax.random.normal(key, (2,))\n"
+        "    return jax.random.uniform(key, (2,))\n"
+    )
+    assert lint_source(src, "m.py") == []
+    # loop-carried reuse IS flagged
+    src_loop = (
+        "import jax\n"
+        "def f(key, n):\n"
+        "    out = []\n"
+        "    for _ in range(n):\n"
+        "        out.append(jax.random.normal(key, (2,)))\n"
+        "    return out\n"
+    )
+    assert any(f.rule == "RA001" for f in lint_source(src_loop, "m.py"))
+
+
+def test_report_severity_gating(tmp_path):
+    report = Report(findings=[
+        Finding("RA006", "warning", "x.py", 1, "w"),
+        Finding("RC012", "info", "<registries>", 1, "i", "contracts"),
+    ], passes_run=["lint"], files_scanned=1)
+    assert not report.failed("error")
+    assert report.failed("warning")
+    assert report.failed("info")
+    assert not report.failed("never")
+    out = tmp_path / "report.json"
+    report.write_json(out)
+    data = json.loads(out.read_text())
+    assert data["summary"] == {"info": 1, "warning": 1, "error": 0}
+    assert len(data["findings"]) == 2
+    # worst first in both JSON and human rendering
+    assert data["findings"][0]["severity"] == "warning"
+    assert "1 warning" in report.render()
+
+
+# ---------------------------------------------------------------------------
+# contracts pass
+# ---------------------------------------------------------------------------
+
+
+def test_registered_protocols_honor_their_contracts():
+    findings, checks_run = contracts_pass()
+    errors = [f for f in findings if f.severity in ("warning", "error")]
+    assert errors == [], "\n".join(f.render() for f in errors)
+    assert checks_run > 50  # every protocol x every contract clause
+
+
+def test_contracts_catch_a_broken_protocol():
+    from repro.core.exchange import (
+        ExchangeProtocol, _REGISTRY, register_exchange,
+    )
+
+    @register_exchange("_broken_for_test")
+    class BrokenProtocol(ExchangeProtocol):
+        # every declaration here is a lie the checker must catch:
+        requires_key = True  # ...but host_encode ignores the key (RC002)
+        lossy = True  # ...but the default roundtrip is exact and
+        #               combine_ef is not overridden (RC003, RC004)
+        is_async = True  # ...but there is no carried state (RC005)
+
+        def combine(self, grads, ctx, *, key=None, state=None):
+            return grads, state
+
+    try:
+        findings, _ = contracts_pass()
+        broken = {
+            f.rule for f in findings if "BrokenProtocol" in f.message
+        }
+        assert {"RC002", "RC003", "RC004", "RC005"} <= broken, broken
+    finally:
+        _REGISTRY.pop("_broken_for_test", None)
+
+
+# ---------------------------------------------------------------------------
+# trace pass
+# ---------------------------------------------------------------------------
+
+
+def test_trace_recorder_digest_is_order_and_value_sensitive():
+    a, b, c = TraceRecorder(), TraceRecorder(), TraceRecorder()
+    a.record("publish", time=1.0, actor=0)
+    a.record("consume", time=2.0, actor=1)
+    b.record("consume", time=2.0, actor=1)
+    b.record("publish", time=1.0, actor=0)
+    c.record("publish", time=1.0, actor=0)
+    c.record("consume", time=2.5, actor=1)
+    assert a.digest() != b.digest()  # order
+    assert a.digest() != c.digest()  # values
+    assert a.digest() != TraceRecorder().digest()  # not the empty digest
+
+
+def test_check_trace_flags_latest_wins_race():
+    t = TraceRecorder()
+    t.record("publish", time=1.0, actor=0, epoch=3, shard=None, nbytes=8)
+    t.record("publish", time=2.0, actor=0, epoch=3, shard=None, nbytes=8)
+    races = [f for f in check_trace(t.events) if f.rule == "RT001"]
+    assert len(races) == 1 and races[0].line == 2
+    # a consume between the publishes clears the race
+    t2 = TraceRecorder()
+    t2.record("publish", time=1.0, actor=0, epoch=3, shard=None, nbytes=8)
+    t2.record("consume", time=1.5, actor=1, peer=0, shard=None, epoch=3)
+    t2.record("publish", time=2.0, actor=0, epoch=3, shard=None, nbytes=8)
+    assert [f for f in check_trace(t2.events) if f.rule == "RT001"] == []
+    # a later epoch on the same register is progress, not a race
+    t3 = TraceRecorder()
+    t3.record("publish", time=1.0, actor=0, epoch=3, shard=None, nbytes=8)
+    t3.record("publish", time=2.0, actor=0, epoch=4, shard=None, nbytes=8)
+    assert [f for f in check_trace(t3.events) if f.rule == "RT001"] == []
+
+
+def test_check_trace_flags_ties_and_unseeded_engine():
+    t = TraceRecorder()
+    t.record("engine", time=0.0, seeded=False)
+    t.record("fire", time=1.0, priority=0, seq=0)
+    t.record("fire", time=1.0, priority=0, seq=1)
+    rules = {f.rule for f in check_trace(t.events)}
+    assert "RT004" in rules and "RT002" in rules
+
+
+def test_diff_runs_flags_nondeterminism():
+    state = {"n": 0}
+
+    def run(tracer):
+        state["n"] += 1
+        tracer.record("fire", time=float(state["n"]), priority=0, seq=0)
+
+    findings, _ = diff_runs("synthetic", run)
+    assert [f.rule for f in findings] == ["RT003"]
+    assert findings[0].severity == "error"
+
+
+def test_serverless_runtime_trace_is_deterministic():
+    findings, recorder = diff_runs("serverless", _run_serverless)
+    assert findings == []
+    kinds = {e[0] for e in recorder.events}
+    assert {"engine", "schedule", "fire", "fanout"} <= kinds
+    # the faulty runtime really exercised retries/cold starts
+    fanouts = [e for e in recorder.events if e[0] == "fanout"]
+    assert len(fanouts) == 3
+
+
+def test_mailbox_trace_records_and_race_detection():
+    from repro.core.mailbox import HostMailbox
+
+    t = TraceRecorder()
+    box = HostMailbox(2, tracer=t)
+    box.publish(0, "g0", nbytes=8, time=1.0, epoch=0)
+    box.publish(0, "g0b", nbytes=8, time=2.0, epoch=0)  # overwrote unread
+    msg = box.consume(0, at_time=3.0, consumer=1)
+    assert msg is not None and msg.payload == "g0b"
+    kinds = [e[0] for e in t.events]
+    assert kinds == ["publish", "publish", "consume"]
+    races = [f for f in check_trace(t.events) if f.rule == "RT001"]
+    assert len(races) == 1
+
+
+@pytest.mark.slow
+def test_p2p_cluster_async_trace_is_deterministic():
+    from repro.analysis.trace import _run_cluster
+
+    findings, recorder = diff_runs("cluster", _run_cluster)
+    assert findings == [], "\n".join(f.render() for f in findings)
+    kinds = {e[0] for e in recorder.events}
+    assert {"engine", "fire", "publish", "consume"} <= kinds
+    # the real publish/consume stream must be race-free
+    assert [f for f in check_trace(recorder.events) if f.rule == "RT001"] == []
+
+
+def test_sim_compute_s_pins_the_async_clock():
+    from repro.configs import get_config
+    from repro.core.simulate import LocalP2PCluster
+    from repro.data import make_dataset
+    from repro.optim import sgd
+
+    def build():
+        return LocalP2PCluster(
+            get_config("squeezenet1.1"),
+            make_dataset("mnist", size=64, image_hw=8, channels=1),
+            num_peers=2, batch_size=8, batches_per_epoch=1,
+            optimizer=sgd(momentum=0.0), lr=0.05, sync=False,
+            sim_compute_s=0.25, seed=5,
+        )
+
+    a, b = build(), build()
+    a.run_epoch_async(0)
+    b.run_epoch_async(0)
+    assert [p.clock for p in a.peers] == [p.clock for p in b.peers]
+    assert all(p.compute_time_s == 0.25 for p in a.peers)
+
+
+# ---------------------------------------------------------------------------
+# links pass
+# ---------------------------------------------------------------------------
+
+
+def test_links_pass_flags_broken_and_passes_good(tmp_path):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "real.md").write_text("target\n")
+    (tmp_path / "README.md").write_text(
+        "[ok](real.md) [web](https://x.test) [anchor](#here)\n"
+        "[broken](missing.md)\n"
+    )
+    (tmp_path / "docs" / "GUIDE.md").write_text("[up](../real.md#frag)\n")
+    findings, checked = links_pass(tmp_path)
+    assert checked == 2
+    assert [(f.rule, f.path, f.line) for f in findings] == [
+        ("RL001", "README.md", 2)
+    ]
+
+
+def test_links_pass_on_this_repo_is_clean():
+    findings, checked = links_pass(ROOT)
+    assert findings == [], "\n".join(f.render() for f in findings)
+    assert checked >= 2  # README + docs/
+
+
+def test_check_links_shim_still_works():
+    out = subprocess.run(
+        [sys.executable, str(ROOT / "scripts" / "check_links.py")],
+        capture_output=True, text=True, cwd=ROOT,
+        env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
+# ---------------------------------------------------------------------------
+# CLI + whole-suite
+# ---------------------------------------------------------------------------
+
+
+def test_cli_runs_green_on_src(tmp_path):
+    from repro.analysis.__main__ import main
+
+    report_path = tmp_path / "analysis.json"
+    rc = main([
+        str(ROOT / "src"), "--root", str(ROOT), "--passes", "lint,links",
+        "--fail-on", "error", "--json", str(report_path),
+    ])
+    assert rc == 0
+    data = json.loads(report_path.read_text())
+    assert data["summary"]["error"] == 0
+    assert set(data["passes"]) == {"lint", "links"}
+
+
+def test_cli_rejects_unknown_pass():
+    with pytest.raises(ValueError, match="unknown analysis pass"):
+        run_analysis(root=ROOT, passes=("lint", "bogus"))
+
+
+def test_src_is_lint_clean():
+    """Regression net over the PR-8 fixes: the shipped source must carry
+    zero lint findings (key reuse, asserts, unordered iteration, ...)."""
+    findings, files = lint_paths([ROOT / "src"], ROOT)
+    assert files > 50
+    assert findings == [], "\n".join(f.render() for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# regression tests for the real violations the suite surfaced
+# ---------------------------------------------------------------------------
+
+
+def test_graph_spec_param_rejection_is_a_clean_valueerror():
+    from repro.core.graph import get_graph
+
+    with pytest.raises(ValueError, match="does not take a ':' parameter"):
+        get_graph("full:2", 8)
+
+
+def test_exchange_spec_param_rejection_is_a_clean_valueerror():
+    from repro.core.exchange import get_exchange
+
+    with pytest.raises(ValueError, match="does not take a ':' parameter"):
+        get_exchange("allgather_mean:1")
+
+
+def test_convergence_mode_validation_survives_python_O():
+    from repro.core.convergence import EarlyStopping, ReduceLROnPlateau
+
+    with pytest.raises(ValueError, match="mode must be"):
+        ReduceLROnPlateau(0.1, mode="bogus")
+    with pytest.raises(ValueError, match="mode must be"):
+        EarlyStopping(mode="bogus")
+
+
+def test_executor_backend_validation_survives_python_O():
+    from repro.core.serverless import ServerlessExecutor
+
+    with pytest.raises(ValueError, match="backend must be"):
+        ServerlessExecutor(backend="bogus")
+
+
+def test_repro_deprecations_escalate_to_errors():
+    """pytest.ini escalates repro DeprecationWarnings: accidental use of a
+    deprecated surface (the PR-3 Topology(async_mode=...) shim) fails the
+    suite instead of scrolling by. Intentional checks use pytest.warns,
+    which still passes under escalation (see test_graph.py)."""
+    from repro.core.p2p import Topology
+
+    with pytest.raises(DeprecationWarning, match='exchange="async"'):
+        Topology(peer_axes=("data",), async_mode=True)
