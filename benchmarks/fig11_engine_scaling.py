@@ -1,0 +1,333 @@
+"""Fig. 11 (beyond-paper) — engine-throughput scaling to 10k–100k peers.
+
+The paper measures its headline numbers at small P; the scaling question
+(SPIRT / LambdaML's per-peer coordination bottleneck) is whether the
+simulation stack itself survives large fleets. This benchmark sweeps
+P ∈ {1e2, 1e3, 1e4, 1e5} x {full, ring, gossip, hierarchical, tree} and
+reports, per (P, mode):
+
+  * overlay construction time and power-iteration spectral gap on the
+    CSR sparse surface (no P x P materialization);
+  * one simulated serverless epoch: a batched ``ServerlessRuntime.fanout``
+    wave of P invocations (cold starts + failures + stragglers) plus the
+    mode's mailbox exchange traffic (degree-bounded consumes for sparse
+    overlays, up/down register sweeps for ``tree``) — events/sec and
+    wall seconds;
+  * tracemalloc peak bytes per P (the sub-quadratic memory claim) and
+    degree-aware wire accounting from the exchange registry.
+
+Dense full-mesh consume traffic is O(P^2) and is only simulated where
+that is affordable (``consume_simulated`` flags each row honestly) — at
+scale the point IS that you use a sparse overlay or the tree.
+
+Claims checked (acceptance criteria for the scaling PR):
+  * a full epoch at P=10,000 simulates in <= 10 s wall on every
+    fully-simulated mode;
+  * peak memory grows sub-quadratically in P;
+  * same-seed batched engine == legacy scalar engine (<= 1e-6, every
+    per-invocation record field) at small P;
+  * sparse ``mixing_row`` == dense ``mixing_matrix()`` row for every
+    registered overlay.
+
+Emits BENCH_fig11_engine_scaling.json (rows + claims).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import time
+import tracemalloc
+
+import jax
+import numpy as np
+
+from repro.core.events import LinkModel, RuntimeConfig, ServerlessRuntime
+from repro.core.exchange import ExchangeContext, get_exchange
+from repro.core.graph import get_graph
+from repro.core.mailbox import HostMailbox
+from repro.core.tree import TreePlan
+
+from benchmarks.common import record
+
+BENCH_JSON = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_fig11_engine_scaling.json"
+)
+
+# (mode, graph spec, exchange spec): the five scaling columns of fig11
+MODES = (
+    ("full", "full", "allgather_mean"),
+    ("ring", "ring", "allgather_mean"),
+    ("gossip", "gossip:3", "allgather_mean"),
+    ("hierarchical", "hierarchical:32", "allgather_mean"),
+    ("tree", "full", "tree"),
+)
+MEMORY_MB = 1792
+PAYLOAD_BYTES = 1 << 20  # nominal per-register publish size (accounting only)
+CONSUME_CAP = 3_000_000  # max mailbox downloads simulated per row
+
+
+def _grads_like():
+    """~1M-param model as ShapeDtypeStructs — byte accounting without
+    allocating anything (the sweep's memory claim must measure the
+    engine, not the reference gradients)."""
+    return {
+        "w": jax.ShapeDtypeStruct((1024, 1024), np.float32),
+        "b": jax.ShapeDtypeStruct((4096,), np.float32),
+    }
+
+
+def _engine_epoch(P: int, seed: int):
+    """One batched fan-out wave of P invocations under a faulty runtime."""
+    rt = ServerlessRuntime(
+        RuntimeConfig(
+            cold_start_s=2.5,
+            failure_rate=0.02,
+            straggler_prob=0.1,
+            seed=seed,
+        )
+    )
+    times = np.random.default_rng(seed).uniform(0.8, 1.2, P)
+    t0 = time.perf_counter()
+    res = rt.fanout(times, memory_mb=MEMORY_MB)
+    dt = time.perf_counter() - t0
+    attempts = sum(r.attempts for r in res.invocations)
+    return {
+        "fanout_wall_s": dt,
+        "events_per_s": attempts / dt if dt > 0 else float("inf"),
+        "attempts": attempts,
+        "cold_starts": res.num_cold_starts,
+        "retries": res.num_retries,
+        "makespan_s": res.makespan_s,
+    }
+
+
+def _mailbox_epoch(P: int, mode: str, graph, fanout: int = 2):
+    """The mode's mailbox register traffic for one epoch.
+
+    Dense modes publish P registers and download along every edge
+    (skipped above CONSUME_CAP — flagged, never silently truncated);
+    ``tree`` runs the real up/down sweep over a :class:`TreePlan`.
+    """
+    mb = HostMailbox(P, graph=graph)
+    t0 = time.perf_counter()
+    if mode == "tree":
+        tp = TreePlan(P, fanout)
+        for r in range(P - 1, 0, -1):  # up-sweep, leaves first
+            mb.publish(r, None, nbytes=PAYLOAD_BYTES, time=0.0, epoch=0,
+                       shard=("up",))
+            mb.consume(r, consumer=tp.parent(r), shard=("up",))
+        for r in range(P):  # down-sweep: hubs publish, children consume
+            if len(tp.children(r)):
+                mb.publish(r, None, nbytes=PAYLOAD_BYTES, time=0.0, epoch=0,
+                           shard=("down",))
+            if r:
+                mb.consume(tp.parent(r), consumer=r, shard=("down",))
+        simulated = True
+    else:
+        for r in range(P):
+            mb.publish(r, None, nbytes=PAYLOAD_BYTES, time=0.0, epoch=0)
+        total_consumes = int(round(graph.mean_degree * P))
+        simulated = total_consumes <= CONSUME_CAP
+        if simulated:
+            for r in range(P):
+                for nbr in graph.neighbors_array(r):
+                    mb.consume(int(nbr), consumer=r)
+    dt = time.perf_counter() - t0
+    ops = mb.stats["publishes"] + mb.stats["consumes"]
+    return {
+        "mailbox_wall_s": dt,
+        "mailbox_ops": ops,
+        "mailbox_ops_per_s": ops / dt if dt > 0 else float("inf"),
+        "consume_simulated": simulated,
+        "live_messages": mb.live_messages,
+    }
+
+
+def _sweep_rows(peer_counts, seed: int):
+    grads_like = _grads_like()
+    rows, peak_mem = [], {}
+    for P in peer_counts:
+        for mode, gspec, xspec in MODES:
+            tracemalloc.start()
+            t0 = time.perf_counter()
+            g = get_graph(gspec, P, seed=seed)
+            build_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            gap = g.spectral_gap()
+            gap_s = time.perf_counter() - t0
+            proto = get_exchange(xspec)
+            ctx = ExchangeContext(num_peers=P, graph=g)
+            engine = _engine_epoch(P, seed)
+            mbx = _mailbox_epoch(P, mode, g)
+            epoch_wall = engine["fanout_wall_s"] + mbx["mailbox_wall_s"]
+            row = {
+                "num_peers": P,
+                "mode": mode,
+                "graph": gspec,
+                "exchange": xspec,
+                "graph_build_s": build_s,
+                "spectral_gap": gap,
+                "spectral_gap_s": gap_s,
+                "degree": ctx.degree,
+                "num_edges": g.num_edges,
+                "bytes_per_edge": proto.wire_bytes_per_edge(grads_like, ctx),
+                "wire_bytes_per_step": proto.wire_bytes(grads_like, ctx),
+                "host_publish_bytes": proto.host_wire_bytes(grads_like, ctx),
+                "epoch_wall_s": epoch_wall,
+                **engine,
+                **mbx,
+            }
+            row["peak_mem_bytes"] = tracemalloc.get_traced_memory()[1]
+            tracemalloc.stop()
+            rows.append(row)
+            record(
+                f"fig11/P{P}/{mode}",
+                epoch_wall * 1e6,
+                f"events_per_s={engine['events_per_s']:.0f};"
+                f"gap={gap:.3f};consume={mbx['consume_simulated']};"
+                f"peak_mem={row['peak_mem_bytes']}",
+            )
+        # scalable-path peak: the dense full-mesh consume wave is the
+        # known-quadratic baseline fig11 argues AGAINST, so the memory
+        # claim tracks the sparse/tree modes (full stays in the rows as
+        # the contrast column)
+        peak_mem[P] = max(
+            r["peak_mem_bytes"] for r in rows
+            if r["num_peers"] == P and r["mode"] != "full"
+        )
+        record(f"fig11/P{P}/peak_mem", 0.0, f"bytes={peak_mem[P]}")
+    return rows, peak_mem
+
+
+def _batched_matches_scalar(seed: int, P: int = 256) -> float:
+    """Same-seed batched engine vs legacy scalar engine: max abs diff over
+    every per-invocation record field (and the makespan)."""
+    cfg = dict(
+        concurrency_limit=64,
+        cold_start_s=2.0,
+        failure_rate=0.05,
+        straggler_prob=0.2,
+        seed=seed,
+    )
+    times = np.random.default_rng(seed + 1).uniform(0.5, 1.5, P)
+    results = {}
+    for batched in (False, True):
+        rt = ServerlessRuntime(RuntimeConfig(**cfg))
+        results[batched] = rt.fanout(
+            times, memory_mb=MEMORY_MB, batched=batched
+        )
+    fields = (
+        "submit_s", "start_s", "end_s", "exec_s", "download_s",
+        "queue_wait_s", "cold_start_s", "cold_starts", "straggler_factor",
+        "attempts", "retries", "backoff_s", "failed_s", "billed_s",
+    )
+    err = abs(results[True].makespan_s - results[False].makespan_s)
+    for a, b in zip(results[False].invocations, results[True].invocations):
+        assert a.index == b.index
+        for f in fields:
+            err = max(err, abs(float(getattr(a, f)) - float(getattr(b, f))))
+    return err
+
+
+def _mixing_row_matches_dense(seed: int, P: int = 64) -> float:
+    """Sparse per-row mixing weights vs the dense matrix, every overlay."""
+    err = 0.0
+    for spec in ("full", "ring", "gossip:3", "hierarchical:8"):
+        g = get_graph(spec, P, seed=seed)
+        W = g.mixing_matrix()
+        for r in range(P):
+            err = max(err, float(np.abs(g.mixing_row(r) - W[r]).max()))
+    return err
+
+
+def run(quick: bool = True, seed: int = 0, smoke: bool = False):
+    if smoke:
+        peer_counts = (100, 1000)
+    elif quick:
+        peer_counts = (100, 1000, 10_000)
+    else:
+        peer_counts = (100, 1000, 10_000, 100_000)
+    rows, peak_mem = _sweep_rows(peer_counts, seed)
+    engine_err = _batched_matches_scalar(seed)
+    mixing_err = _mixing_row_matches_dense(seed)
+    record("fig11/batched_vs_scalar", 0.0, f"max_abs_err={engine_err:.2e}")
+    record("fig11/mixing_row_vs_dense", 0.0, f"max_abs_err={mixing_err:.2e}")
+
+    target_P = 10_000 if 10_000 in peer_counts else max(peer_counts)
+    sim_rows = [
+        r for r in rows
+        if r["num_peers"] == target_P and r["consume_simulated"]
+    ]
+    # memory exponent between the two largest P: sub-quadratic means the
+    # log-log slope stays well under 2 (dense adjacency would be exactly 2)
+    ps = sorted(peak_mem)
+    p_lo, p_hi = ps[-2], ps[-1]
+    mem_exponent = (
+        np.log(peak_mem[p_hi] / peak_mem[p_lo]) / np.log(p_hi / p_lo)
+    )
+    tree_hi = next(
+        r for r in rows if r["num_peers"] == ps[-1] and r["mode"] == "tree"
+    )
+    full_hi = next(
+        r for r in rows if r["num_peers"] == ps[-1] and r["mode"] == "full"
+    )
+    claims = {
+        # every fully-simulated mode clears a P=10k epoch in seconds
+        "epoch_10k_under_10s": bool(
+            sim_rows and max(r["epoch_wall_s"] for r in sim_rows) <= 10.0
+        ),
+        "engine_over_10k_events_per_s": bool(
+            min(r["events_per_s"] for r in rows) >= 10_000
+        ),
+        "memory_subquadratic": bool(mem_exponent < 1.7),
+        "batched_matches_scalar": bool(engine_err <= 1e-6),
+        "mixing_row_matches_dense": bool(mixing_err <= 1e-12),
+        # a tree hub uploads <= 2 buffers regardless of P; a full-mesh
+        # peer's per-step wire grows O(P)
+        "tree_bounded_publish_vs_full_mesh": bool(
+            tree_hi["host_publish_bytes"]
+            < 0.1 * full_hi["wire_bytes_per_step"]
+        ),
+    }
+    record(
+        "fig11/claim:engine_scaling",
+        0.0,
+        ";".join(f"{k}={v}" for k, v in claims.items())
+        + f";holds={all(claims.values())}",
+    )
+    with open(BENCH_JSON, "w") as f:
+        json.dump(
+            {
+                "bench": "fig11_engine_scaling",
+                "quick": quick,
+                "smoke": smoke,
+                "seed": seed,
+                "peer_counts": list(peer_counts),
+                "modes": [m[0] for m in MODES],
+                "rows": rows,
+                "peak_mem_bytes": {str(k): v for k, v in peak_mem.items()},
+                "mem_exponent": float(mem_exponent),
+                "batched_vs_scalar_max_err": engine_err,
+                "mixing_row_vs_dense_max_err": mixing_err,
+                "ru_maxrss_kb": resource.getrusage(resource.RUSAGE_SELF).ru_maxrss,
+                "claims": claims,
+            },
+            f,
+            indent=2,
+        )
+    record("fig11/json", 0.0, f"path={os.path.relpath(BENCH_JSON)}")
+    return claims
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="sweep up to P=1e5")
+    ap.add_argument("--smoke", action="store_true",
+                    help="P<=1000 CI smoke (fastest path through every mode)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    claims = run(quick=not args.full, seed=args.seed, smoke=args.smoke)
+    if not all(claims.values()):
+        raise SystemExit(f"fig11 claims failed: {claims}")

@@ -29,6 +29,7 @@ def main() -> None:
         fig8_topology_scaling,
         fig9_sharded_aggregation,
         fig10_cost_time_frontier,
+        fig11_engine_scaling,
         fig12_byzantine,
         fig13_fused_compression,
         roofline,
@@ -48,6 +49,7 @@ def main() -> None:
         "fig8": fig8_topology_scaling,
         "fig9": fig9_sharded_aggregation,
         "fig10": fig10_cost_time_frontier,
+        "fig11": fig11_engine_scaling,
         "fig12": fig12_byzantine,
         "fig13": fig13_fused_compression,
         "roofline": roofline,

@@ -34,6 +34,11 @@ for n in available_graphs():
   python -m benchmarks.run --only fig9
   echo "== smoke: cost-time frontier, serverless vs instance (Fig. 10) =="
   python -m benchmarks.run --only fig10
+  echo "== smoke: engine scaling rails (Fig. 11) =="
+  # fastest path through every mode (P<=1000) + the batched==scalar and
+  # mixing_row==dense rails; the 1e5-peer sweep is
+  # `python -m benchmarks.fig11_engine_scaling --full`
+  python -m benchmarks.fig11_engine_scaling --smoke
   echo "== smoke: byzantine-robust aggregation rails (Fig. 12) =="
   # fast rails only (equivalence, wire accounting, adversary bookkeeping);
   # the full attack sweep is `python -m benchmarks.run --only fig12`

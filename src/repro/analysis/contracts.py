@@ -1,9 +1,10 @@
 """Pass 2 — registry contract cross-validation.
 
 The exchange/graph/allocation registries promise behaviour through
-declarative ``ClassVar`` flags (``repro/core/exchange.py`` lines 119-125:
+declarative ``ClassVar`` flags (``repro/core/exchange.py`` lines 119-126:
 ``name``, ``is_async``, ``requires_key``, ``decomposes_per_edge``,
-``requires_full_graph``, ``sharded``, ``lossy``). Nothing in Python makes
+``requires_full_graph``, ``sharded``, ``lossy``, ``hierarchical``).
+Nothing in Python makes
 a flag true — a protocol can declare ``lossy = False`` while its codec
 drops bits, and every downstream consumer (EF-SGD, the cost model, the
 cluster's refusal paths) silently mis-behaves. This pass instantiates
@@ -41,6 +42,11 @@ consequence against its declaration:
   ``planned_mb`` when it has no history to learn from.
 * ``RC012`` (info) cross-registry name reuse — the same name registered
   in two registries is legal (namespaces are distinct) but worth knowing.
+* ``RC013`` graph sparse surface — every registered overlay answers the
+  CSR-era queries (``neighbors_array`` / ``mixing_row`` / ``degrees`` /
+  ``mix_apply`` / power-iteration ``spectral_gap``) consistently with
+  the dense oracles: per-row mixing weights are bit-equal to the dense
+  matrix row, and the power gap matches the eigvalsh gap.
 """
 from __future__ import annotations
 
@@ -53,7 +59,7 @@ from repro.analysis.common import Finding
 
 PASS_NAME = "contracts"
 
-CONTRACT_RULES = tuple(f"RC{i:03d}" for i in range(1, 13))
+CONTRACT_RULES = tuple(f"RC{i:03d}" for i in range(1, 14))
 
 # Parameterized protocols and a known-good sample argument; every other
 # registered name must REJECT a ':' parameter.
@@ -334,7 +340,7 @@ def _check_graphs(ck: _Checker) -> None:
             "adjacency has self-loops; a peer is not its own neighbor",
         )
         ck.expect(
-            bool(g.is_connected), "RC010", cls,
+            bool(g.is_connected()), "RC010", cls,
             f"overlay is disconnected at P={P}; gossip averaging cannot "
             "reach consensus",
         )
@@ -343,6 +349,41 @@ def _check_graphs(ck: _Checker) -> None:
             np.allclose(W.sum(axis=1), 1.0) and np.allclose(W, W.T),
             "RC010", cls,
             "Metropolis–Hastings mixing matrix is not doubly stochastic",
+        )
+        # RC013 — the sparse scaling surface must agree with the dense
+        # oracles (the 10k-100k-peer path never materializes P x P)
+        ck.expect(
+            all(
+                np.array_equal(g.neighbors_array(r), np.flatnonzero(adj[r]))
+                for r in range(P)
+            ),
+            "RC013", cls,
+            "neighbors_array(r) disagrees with the dense adjacency row",
+        )
+        ck.expect(
+            all(
+                np.array_equal(g.mixing_row(r), np.asarray(g.mixing_matrix())[r])
+                for r in range(P)
+            ),
+            "RC013", cls,
+            "lazy mixing_row(r) is not bit-equal to mixing_matrix()[r]",
+        )
+        ck.expect(
+            np.array_equal(g.degrees, adj.sum(axis=1)),
+            "RC013", cls,
+            "CSR degrees disagree with dense adjacency row sums",
+        )
+        x = np.random.default_rng(0).standard_normal(P)
+        ck.expect(
+            bool(np.allclose(g.mix_apply(x), W @ x, atol=1e-12)),
+            "RC013", cls,
+            "sparse mix_apply(x) disagrees with the dense W @ x",
+        )
+        ck.expect(
+            abs(g.spectral_gap(method="power") - g.spectral_gap(method="dense"))
+            <= 1e-6,
+            "RC013", cls,
+            "power-iteration spectral gap drifts from the eigvalsh oracle",
         )
         # RC009 — non-param graphs reject a ':' parameter cleanly
         if name not in PARAM_GRAPH_SAMPLES and name != "static":

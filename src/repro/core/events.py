@@ -35,6 +35,7 @@ nothing about JAX, gradients, or dollars — callers translate.
 from __future__ import annotations
 
 import abc
+import bisect
 import heapq
 import math
 from collections import deque
@@ -316,35 +317,83 @@ class _ContainerPool:
     ``t0 <= t <= t0 + keepalive``. Changing the memory tier (dynamic
     allocation) strands the old tier's pool — re-sizing pays cold starts
     again, which is exactly the trade-off an AllocationPolicy navigates.
+
+    Each key's idle containers are a release-time-sorted list, so acquire
+    is a bisect (most recent usable = LIFO) plus amortized-O(1) expiry
+    from the stale end — the old implementation rebuilt the list and
+    linearly scanned for the maximum on every acquire. ``stats`` counts
+    warm hits, cold misses, and keepalive expiries for the micro-rails.
     """
 
     def __init__(self, keepalive_s: float):
         self.keepalive_s = keepalive_s
-        self._idle: Dict[Tuple[Any, int], List[float]] = {}
+        self._idle: Dict[Tuple[Any, int], List[float]] = {}  # sorted ascending
+        self.stats = {"hits": 0, "misses": 0, "expired": 0}
+
+    def _expire(self, row: List[float], at: float) -> None:
+        cut = bisect.bisect_left(row, at - self.keepalive_s)
+        if cut:
+            self.stats["expired"] += cut
+            del row[:cut]
 
     def acquire(self, key: Tuple[Any, int], at: float) -> bool:
         """True -> warm container reused; False -> cold start."""
-        idle = self._idle.get(key, [])
-        # prune expired, then take the most recently used warm container
-        idle = [t for t in idle if at - t <= self.keepalive_s]
-        best = None
-        for i, t in enumerate(idle):
-            if t <= at and (best is None or t > idle[best]):
-                best = i
-        if best is None:
-            self._idle[key] = idle
-            return False
-        idle.pop(best)
-        self._idle[key] = idle
-        return True
+        row = self._idle.get(key)
+        if row:
+            self._expire(row, at)
+            # most recently released container with release time <= at
+            # (entries beyond are future releases pre-staged by the
+            # batched fanout path; they are invisible until their time)
+            i = bisect.bisect_right(row, at) - 1
+            if i >= 0:
+                row.pop(i)
+                self.stats["hits"] += 1
+                return True
+        self.stats["misses"] += 1
+        return False
+
+    def take_available(self, key: Tuple[Any, int], at: float, want: int) -> int:
+        """Batch form of ``want`` same-instant acquires: claims (and
+        removes) up to ``want`` warm containers usable at ``at``, returns
+        how many were claimed. Equivalent to ``want`` acquire() calls at
+        the same timestamp."""
+        got = 0
+        row = self._idle.get(key)
+        if row:
+            self._expire(row, at)
+            hi = bisect.bisect_right(row, at)
+            got = min(want, hi)
+            if got:
+                del row[hi - got:hi]
+        self.stats["hits"] += got
+        self.stats["misses"] += want - got
+        return got
 
     def release(self, key: Tuple[Any, int], at: float):
-        self._idle.setdefault(key, []).append(at)
+        row = self._idle.setdefault(key, [])
+        if row and at < row[-1]:
+            bisect.insort(row, at)  # rare: out-of-order release
+        else:
+            row.append(at)
+
+    def release_many(self, key: Tuple[Any, int], times: Sequence[float]):
+        """Batch release at ascending-sorted ``times`` (the batched fanout
+        path stages a whole wave's completion releases at once)."""
+        row = self._idle.setdefault(key, [])
+        needs_sort = bool(row) and len(times) > 0 and row[-1] > times[0]
+        row.extend(float(t) for t in times)
+        if needs_sort:
+            row.sort()
 
 
 # ---------------------------------------------------------------------------
 # ServerlessRuntime
 # ---------------------------------------------------------------------------
+
+# Fan-outs at least this large auto-select the batched (array-valued)
+# engine when no tracer is attached; below it the scalar engine's
+# per-event cost is negligible and its full trace stream is worth keeping.
+BATCHED_FANOUT_MIN = 256
 
 
 class ServerlessRuntime:
@@ -377,6 +426,7 @@ class ServerlessRuntime:
         submit_time: Optional[float] = None,
         download_bytes: Optional[Sequence[int]] = None,
         link: Optional[LinkModel] = None,
+        batched: Optional[bool] = None,
     ) -> FanoutResult:
         """Simulate one fan-out of ``len(exec_times_s)`` invocations.
 
@@ -389,16 +439,88 @@ class ServerlessRuntime:
         its P-1 shard pieces before reducing them — billed like execution
         and re-paid on retries. Returns the makespan and per-invocation
         stage records; all record times are absolute on the runtime clock.
+
+        Every stochastic choice (stragglers, per-attempt failures) is
+        pre-drawn as index-keyed numpy vectors before simulation starts,
+        so the two engines below consume identical randomness:
+
+        * the *scalar* engine — one closure per invocation event on the
+          :class:`EventEngine` heap (the legacy oracle; full per-event
+          trace records);
+        * the *batched* engine — array-valued waves with only the retry /
+          completion frontier on a primitive heap, ~two orders of
+          magnitude faster at P >= 10k.
+
+        ``batched=None`` picks the batched engine for fan-outs of at
+        least ``BATCHED_FANOUT_MIN`` invocations when no tracer is
+        attached (the batched engine emits only the condensed ``fanout``
+        trace record); pass True/False to force. Same seed, same config
+        => both engines produce identical records and makespan (the
+        equivalence rail in the tests).
         """
         cfg = self.config
         if submit_time is None:
             submit_time = self.clock
-        engine = EventEngine(rng=self.rng, tracer=self.tracer)
-        engine.now = float(submit_time)
+        submit_time = float(submit_time)
+        n = len(exec_times_s)
+        times = np.asarray(exec_times_s, dtype=np.float64)
         key = (function_key, int(memory_mb))
+        # -- pre-draw all randomness, index-keyed (shared by both engines) --
+        factors = np.ones(n, dtype=np.float64)
+        if cfg.straggler_prob > 0.0:
+            hits = self.rng.random(n) < cfg.straggler_prob
+            k = int(hits.sum())
+            if k:
+                factors[hits] = 1.0 + self.rng.exponential(cfg.straggler_slowdown, k)
+        # u_fail[a-1, i] decides attempt a of invocation i (attempts past
+        # the retry budget never draw — they only fail by timeout)
+        u_fail = None
+        if cfg.failure_rate > 0.0 and cfg.max_retries > 0:
+            u_fail = self.rng.random((cfg.max_retries, n))
+        dl_s = np.zeros(n, dtype=np.float64)
+        if download_bytes is not None and link is not None:
+            dl_s = (
+                np.asarray(download_bytes, dtype=np.float64).astype(np.int64)
+                * 8.0 / link.bandwidth_bps
+                + link.per_message_overhead_s
+            )
+        if batched is None:
+            batched = self.tracer is None and n >= BATCHED_FANOUT_MIN
+        run = self._fanout_batched if batched else self._fanout_scalar
+        records, last_end = run(
+            times, factors, u_fail, dl_s,
+            memory_mb=int(memory_mb), key=key,
+            invoke_overhead_s=invoke_overhead_s, timeout_s=timeout_s,
+            submit_time=submit_time,
+        )
+        self.fanouts_run += 1
+        self.clock = max(self.clock, last_end)
+        if self.tracer is not None:
+            self.tracer.record(
+                "fanout",
+                time=last_end,
+                invocations=len(records),
+                cold_starts=sum(r.cold_starts for r in records),
+                retries=sum(r.retries for r in records),
+            )
+        return FanoutResult(
+            makespan_s=last_end - submit_time,
+            memory_mb=int(memory_mb),
+            invocations=records,
+        )
+
+    def _fanout_scalar(
+        self, times, factors, u_fail, dl_s, *,
+        memory_mb, key, invoke_overhead_s, timeout_s, submit_time,
+    ) -> Tuple[List[InvocationRecord], float]:
+        """Legacy closure-per-event engine (oracle path, full tracing)."""
+        cfg = self.config
+        n = times.shape[0]
+        engine = EventEngine(rng=self.rng, tracer=self.tracer)
+        engine.now = submit_time
         records = [
-            InvocationRecord(index=i, memory_mb=int(memory_mb), submit_s=submit_time)
-            for i in range(len(exec_times_s))
+            InvocationRecord(index=i, memory_mb=memory_mb, submit_s=submit_time)
+            for i in range(n)
         ]
         capacity = cfg.concurrency_limit or math.inf
         state = {"running": 0, "last_end": submit_time}
@@ -424,25 +546,19 @@ class ServerlessRuntime:
             rec.attempts += 1
             if rec.attempts == 1:
                 rec.start_s = engine.now
-                if cfg.straggler_prob > 0.0 and engine.rng.random() < cfg.straggler_prob:
-                    rec.straggler_factor = 1.0 + engine.rng.exponential(
-                        cfg.straggler_slowdown
-                    )
+                rec.straggler_factor = float(factors[i])
             cold = not self.pool.acquire(key, engine.now)
             init_s = cfg.cold_start_s if cold else 0.0
             if cold:
                 rec.cold_starts += 1
-            dl_s = 0.0
-            if download_bytes is not None and link is not None:
-                dl_s = link.transfer_s(int(download_bytes[i]))
-            exec_s = exec_times_s[i] * rec.straggler_factor + dl_s
+            exec_s = float(times[i] * rec.straggler_factor + dl_s[i])
             duration = init_s + invoke_overhead_s + exec_s
             out_of_retries = rec.attempts > cfg.max_retries
             timed_out = timeout_s is not None and duration > timeout_s
             failed = timed_out or (
-                cfg.failure_rate > 0.0
+                u_fail is not None
                 and not out_of_retries
-                and engine.rng.random() < cfg.failure_rate
+                and u_fail[rec.attempts - 1, i] < cfg.failure_rate
             )
             if failed and timed_out and out_of_retries:
                 raise FanoutTimeout(
@@ -475,8 +591,8 @@ class ServerlessRuntime:
                     rec.straggler_factor = 1.0
                 return
             rec.cold_start_s += init_s
-            rec.exec_s = exec_s
-            rec.download_s = dl_s
+            rec.exec_s = float(exec_s)
+            rec.download_s = float(dl_s[i])
             rec.billed_s += duration
 
             def complete(i=i, duration=duration):
@@ -488,24 +604,239 @@ class ServerlessRuntime:
 
             engine.schedule_at(engine.now + duration, complete)
 
-        for i in range(len(exec_times_s)):
+        for i in range(n):
             engine.schedule_at(submit_time, lambda i=i: try_start(i))
         engine.run()
-        self.fanouts_run += 1
-        self.clock = max(self.clock, state["last_end"])
-        if self.tracer is not None:
-            self.tracer.record(
-                "fanout",
-                time=state["last_end"],
-                invocations=len(records),
-                cold_starts=sum(r.cold_starts for r in records),
-                retries=sum(r.retries for r in records),
+        return records, state["last_end"]
+
+    def _fanout_batched(
+        self, times, factors, u_fail, dl_s, *,
+        memory_mb, key, invoke_overhead_s, timeout_s, submit_time,
+    ) -> Tuple[List[InvocationRecord], float]:
+        """Array-valued fanout engine.
+
+        The homogeneous first wave (every invocation admitted at the
+        submit instant, i.e. capacity >= n) is computed as pure numpy —
+        warm/cold split, durations, failure partition, completion times —
+        with completion releases bulk-staged into the warm pool. Only the
+        *frontier* then rides a primitive-tuple heap: retry re-arrivals
+        and, under a concurrency cap, slot releases and completions. No
+        Python closure is ever scheduled, and records materialize once at
+        the end.
+
+        Event ordering reproduces the scalar engine exactly: the heap is
+        keyed ``(time, seq)`` and ``seq`` is advanced in the same order
+        the scalar engine allocates its insertion sequence (including for
+        events the batched path never needs to materialize), so ties
+        resolve identically and the two engines agree to the last bit.
+        """
+        cfg = self.config
+        n = times.shape[0]
+        capacity = cfg.concurrency_limit or math.inf
+        pool = self.pool
+        factors = factors.copy()  # the forced-nominal rule mutates it
+        rate = cfg.failure_rate
+        TRY, RELEASE, COMPLETE = 0, 1, 2
+
+        attempts = np.zeros(n, np.int64)
+        start_s = np.zeros(n)
+        end_s = np.zeros(n)
+        exec_s = np.zeros(n)
+        download_s = np.zeros(n)
+        queue_wait = np.zeros(n)
+        cold_s = np.zeros(n)
+        cold_n = np.zeros(n, np.int64)
+        retries = np.zeros(n, np.int64)
+        backoff_tot = np.zeros(n)
+        failed_tot = np.zeros(n)
+        billed = np.zeros(n)
+
+        heap: List[Tuple[float, int, int, int]] = []
+        waiting: deque = deque()
+        state = {"running": 0, "seq": 0, "last_end": submit_time}
+        bounded = capacity < n  # slots can actually contend
+
+        def timeout_msg(i: int) -> str:
+            return (
+                f"invocation {i} still exceeds the {timeout_s:.0f}s timeout "
+                f"after {cfg.max_retries} retries on a {memory_mb}MB function"
             )
-        return FanoutResult(
-            makespan_s=state["last_end"] - submit_time,
-            memory_mb=int(memory_mb),
-            invocations=records,
-        )
+
+        def start_attempt(i: int, now: float):
+            attempts[i] += 1
+            a = int(attempts[i])
+            if a == 1:
+                start_s[i] = now
+            cold = not pool.acquire(key, now)
+            init_s = cfg.cold_start_s if cold else 0.0
+            if cold:
+                cold_n[i] += 1
+            ex = times[i] * factors[i] + dl_s[i]
+            duration = init_s + invoke_overhead_s + ex
+            out_of_retries = a > cfg.max_retries
+            timed_out = timeout_s is not None and duration > timeout_s
+            failed = timed_out or (
+                u_fail is not None
+                and not out_of_retries
+                and u_fail[a - 1, i] < rate
+            )
+            if failed and timed_out and out_of_retries:
+                raise FanoutTimeout(timeout_msg(i))
+            if failed:
+                run_for = min(
+                    duration * cfg.failure_runtime_frac,
+                    timeout_s if timed_out else duration,
+                )
+                burned_init = min(run_for, init_s)
+                cold_s[i] += burned_init
+                failed_tot[i] += run_for - burned_init
+                billed[i] += run_for
+                retries[i] += 1
+                backoff = cfg.retry_backoff_s * (2.0 ** (a - 1))
+                backoff_tot[i] += backoff
+                if bounded:
+                    heapq.heappush(
+                        heap, (now + run_for, state["seq"], RELEASE, -1)
+                    )
+                state["seq"] += 1  # scalar allocates this seq either way
+                heapq.heappush(
+                    heap, (now + run_for + backoff, state["seq"], TRY, i)
+                )
+                state["seq"] += 1
+                if timed_out and a >= cfg.max_retries:
+                    factors[i] = 1.0
+                return
+            cold_s[i] += init_s
+            exec_s[i] = ex
+            download_s[i] = dl_s[i]
+            billed[i] += duration
+            heapq.heappush(heap, (now + duration, state["seq"], COMPLETE, i))
+            state["seq"] += 1
+
+        def admit_next(now: float):
+            state["running"] -= 1
+            if waiting:
+                j, t_enq = waiting.popleft()
+                queue_wait[j] += now - t_enq
+                state["running"] += 1
+                start_attempt(j, now)
+
+        if n and not bounded:
+            # -- vectorized first wave: all n admitted at the submit instant
+            warm = np.zeros(n, dtype=bool)
+            warm[: pool.take_available(key, submit_time, n)] = True
+            init = np.where(warm, 0.0, cfg.cold_start_s)
+            cold_n += ~warm
+            ex = times * factors + dl_s
+            duration = init + invoke_overhead_s + ex
+            if timeout_s is None:
+                timed_out = np.zeros(n, dtype=bool)
+            else:
+                timed_out = duration > timeout_s
+            oor = 1 > cfg.max_retries  # attempt 1 already out of retries
+            fail_draw = (
+                (u_fail[0] < rate)
+                if (u_fail is not None and not oor)
+                else np.zeros(n, dtype=bool)
+            )
+            failed = timed_out | fail_draw
+            if oor and bool(np.any(failed & timed_out)):
+                raise FanoutTimeout(
+                    timeout_msg(int(np.argmax(failed & timed_out)))
+                )
+            attempts[:] = 1
+            start_s[:] = submit_time
+            ok = ~failed
+            cold_s[ok] += init[ok]
+            exec_s[ok] = ex[ok]
+            download_s[ok] = dl_s[ok]
+            billed[ok] += duration[ok]
+            ends = submit_time + duration[ok]
+            end_s[ok] = ends
+            if ends.size:
+                state["last_end"] = max(state["last_end"], float(ends.max()))
+                pool.release_many(key, np.sort(ends))
+            # seq parity with the scalar engine: n initial try_starts, then
+            # (ascending index) 1 seq per success, 2 per failure
+            costs = np.where(failed, 2, 1)
+            seq_base = n + np.concatenate(([0], np.cumsum(costs)[:-1]))
+            state["seq"] = n + int(costs.sum())
+            fid = np.flatnonzero(failed)
+            if fid.size:
+                cap_arr = duration if timeout_s is None else np.where(
+                    timed_out, timeout_s, duration
+                )
+                run_for = np.minimum(duration * cfg.failure_runtime_frac, cap_arr)
+                burned = np.minimum(run_for, init)
+                cold_s[fid] += burned[fid]
+                failed_tot[fid] += (run_for - burned)[fid]
+                billed[fid] += run_for[fid]
+                retries[fid] += 1
+                backoff = cfg.retry_backoff_s  # 2**(1-1)
+                backoff_tot[fid] += backoff
+                if timeout_s is not None and cfg.max_retries <= 1:
+                    factors[np.flatnonzero(failed & timed_out)] = 1.0
+                for i in fid:
+                    heapq.heappush(
+                        heap,
+                        (
+                            submit_time + float(run_for[i]) + backoff,
+                            int(seq_base[i]) + 1,
+                            TRY,
+                            int(i),
+                        ),
+                    )
+        else:
+            # capacity-bound admission: same event algebra as the scalar
+            # engine, but primitive heap tuples instead of closures
+            heap = [(submit_time, i, TRY, i) for i in range(n)]
+            heapq.heapify(heap)
+            state["seq"] = n
+
+        while heap:
+            now, _seq, kind, i = heapq.heappop(heap)
+            if kind == TRY:
+                # when capacity >= n slots can never contend (an invocation
+                # has at most one outstanding attempt), so admission is
+                # unconditional and slot bookkeeping is skipped entirely
+                if not bounded:
+                    start_attempt(i, now)
+                elif state["running"] < capacity:
+                    state["running"] += 1
+                    start_attempt(i, now)
+                else:
+                    waiting.append((i, now))
+            elif kind == RELEASE:
+                admit_next(now)
+            else:  # COMPLETE
+                end_s[i] = now
+                state["last_end"] = max(state["last_end"], now)
+                pool.release(key, now)
+                if bounded:
+                    admit_next(now)
+
+        records = [
+            InvocationRecord(
+                index=i,
+                memory_mb=memory_mb,
+                submit_s=submit_time,
+                start_s=float(start_s[i]),
+                end_s=float(end_s[i]),
+                exec_s=float(exec_s[i]),
+                download_s=float(download_s[i]),
+                queue_wait_s=float(queue_wait[i]),
+                cold_start_s=float(cold_s[i]),
+                cold_starts=int(cold_n[i]),
+                straggler_factor=float(factors[i]),
+                attempts=int(attempts[i]),
+                retries=int(retries[i]),
+                backoff_s=float(backoff_tot[i]),
+                failed_s=float(failed_tot[i]),
+                billed_s=float(billed[i]),
+            )
+            for i in range(n)
+        ]
+        return records, state["last_end"]
 
 
 # ---------------------------------------------------------------------------

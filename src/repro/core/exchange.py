@@ -123,6 +123,7 @@ class ExchangeProtocol(abc.ABC):
     requires_full_graph: ClassVar[bool] = False  # True: refuses sparse overlays
     sharded: ClassVar[bool] = False  # True: shards, not pytrees, on the wire
     lossy: ClassVar[bool] = False  # True: codec drops information (EF applies)
+    hierarchical: ClassVar[bool] = False  # True: multi-level tree reduce
 
     # -- device path --------------------------------------------------------
     def init_state(self, grads_like, ctx: ExchangeContext):

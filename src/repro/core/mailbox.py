@@ -18,6 +18,8 @@ import uuid
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
+import numpy as np
+
 MESSAGE_CAP_BYTES = 100 * 1024 * 1024  # Amazon MQ per-message limit
 S3_ROUND_TRIP_S = 0.05  # fetch-by-UUID latency for indirected payloads
 
@@ -30,6 +32,31 @@ class Message:
     nbytes: int = 0  # wire size, charged to the consumer's simulated link
     via_s3: bool = False
     s3_uuid: Optional[str] = None
+
+
+class _Registers:
+    """One shard tag's register bank: struct-of-arrays over all P peers.
+
+    Replaces the per-message dict-of-dataclasses storage — a publish is a
+    handful of O(1) array writes, and the bank's footprint is preallocated
+    columns (floats/ints/bools plus two object slots per peer) instead of
+    a heap object per live message. :class:`Message` remains the *read*
+    API: ``consume`` materializes one on demand.
+    """
+
+    __slots__ = (
+        "payload", "publish_time", "epoch", "nbytes", "via_s3", "s3_uuid",
+        "filled",
+    )
+
+    def __init__(self, num_peers: int):
+        self.payload: List[Any] = [None] * num_peers
+        self.publish_time = np.zeros(num_peers, dtype=np.float64)
+        self.epoch = np.zeros(num_peers, dtype=np.int64)
+        self.nbytes = np.zeros(num_peers, dtype=np.int64)
+        self.via_s3 = np.zeros(num_peers, dtype=bool)
+        self.s3_uuid: List[Optional[str]] = [None] * num_peers
+        self.filled = np.zeros(num_peers, dtype=bool)
 
 
 class HostMailbox:
@@ -67,10 +94,13 @@ class HostMailbox:
         # is recorded for the happens-before race checker and the same-seed
         # determinism differ. None keeps the broker overhead-free.
         self.tracer = tracer
-        # (peer, shard) -> latest message; shard=None is the classic
-        # whole-gradient register
-        self._queues: Dict[Tuple[int, Any], Message] = {}
-        self._barrier: List[Tuple[int, int]] = []  # (peer, epoch) completions
+        # shard tag -> preallocated register bank over all peers;
+        # shard=None is the classic whole-gradient register
+        self._shards: Dict[Any, _Registers] = {}
+        self._live = 0  # filled registers across all banks (O(1) count)
+        # epoch -> (per-peer signalled flags, distinct-signal count):
+        # signal/complete/reset are all O(1) in signals ever sent
+        self._barrier: Dict[int, Tuple[np.ndarray, int]] = {}
         self.stats = {
             "publishes": 0, "consumes": 0, "s3_indirections": 0, "blocked": 0,
             "compacted": 0, "poisoned_publishes": 0, "rejected_nonfinite": 0,
@@ -91,30 +121,40 @@ class HostMailbox:
             # tell; robust consumers must survive without this signal.
             self.stats["poisoned_publishes"] += 1
         via_s3 = nbytes > MESSAGE_CAP_BYTES
-        msg = Message(
-            payload, time, epoch, nbytes=nbytes,
-            via_s3=via_s3, s3_uuid=str(uuid.uuid4()) if via_s3 else None,
-        )
-        key = (peer, shard)
-        prev = self._queues.get(key)
-        if prev is not None and prev.epoch == epoch:
-            # latest-wins compaction within the (peer, epoch) cell
-            self.stats["compacted"] += 1
-        self._queues[key] = msg  # replaces the previous message (latest wins)
+        regs = self._shards.get(shard)
+        if regs is None:
+            regs = self._shards[shard] = _Registers(self.num_peers)
+        replaced_epoch: Optional[int] = None
+        if regs.filled[peer]:
+            replaced_epoch = int(regs.epoch[peer])
+            if replaced_epoch == epoch:
+                # latest-wins compaction within the (peer, epoch) cell
+                self.stats["compacted"] += 1
+        else:
+            regs.filled[peer] = True
+            self._live += 1
+        # replaces the previous message (latest wins)
+        regs.payload[peer] = payload
+        regs.publish_time[peer] = time
+        regs.epoch[peer] = epoch
+        regs.nbytes[peer] = nbytes
+        regs.via_s3[peer] = via_s3
+        regs.s3_uuid[peer] = str(uuid.uuid4()) if via_s3 else None
         self.stats["publishes"] += 1
         if via_s3:
             self.stats["s3_indirections"] += 1
         if self.tracer is not None:
             self.tracer.record(
                 "publish", time=time, actor=peer, epoch=epoch, shard=shard,
-                nbytes=nbytes, replaced_epoch=None if prev is None else prev.epoch,
+                nbytes=nbytes, replaced_epoch=replaced_epoch,
             )
 
     @property
     def live_messages(self) -> int:
         """Registers currently holding a message — bounded by peers x shards,
-        NOT by epochs run (replacement, not append)."""
-        return len(self._queues)
+        NOT by epochs run (replacement, not append). O(1): maintained as a
+        counter, never scanned."""
+        return self._live
 
     def download_time_s(
         self, msg: Message, bandwidth_bps: Optional[float] = None, *, link=None
@@ -152,7 +192,7 @@ class HostMailbox:
             self.graph is not None
             and consumer is not None
             and consumer != peer
-            and not self.graph.adjacency[consumer, peer]
+            and not self.graph.has_edge(consumer, peer)
         ):
             self.stats["blocked"] += 1
             if self.tracer is not None:
@@ -161,9 +201,13 @@ class HostMailbox:
                     shard=shard,
                 )
             return None
-        msg = self._queues.get((peer, shard))
+        regs = self._shards.get(shard)
         self.stats["consumes"] += 1
-        if msg is None or (at_time is not None and msg.publish_time > at_time):
+        if (
+            regs is None
+            or not regs.filled[peer]
+            or (at_time is not None and regs.publish_time[peer] > at_time)
+        ):
             # nothing in the register, or not yet published at this
             # simulated time — either way the consumer sees a miss
             if self.tracer is not None:
@@ -171,6 +215,14 @@ class HostMailbox:
                     "miss", time=at_time, actor=consumer, peer=peer, shard=shard,
                 )
             return None
+        msg = Message(
+            regs.payload[peer],
+            float(regs.publish_time[peer]),
+            int(regs.epoch[peer]),
+            nbytes=int(regs.nbytes[peer]),
+            via_s3=bool(regs.via_s3[peer]),
+            s3_uuid=regs.s3_uuid[peer],
+        )
         if consumer is not None:
             self.delivered_edges.add((consumer, peer))
         if self.tracer is not None:
@@ -181,12 +233,22 @@ class HostMailbox:
         return msg
 
     # -- synchronization barrier (paper §III-B.6) ---------------------------
+    # Per-epoch signalled-flag arrays + distinct counts: every operation is
+    # O(1), where the old list-of-(peer, epoch) storage rescanned all
+    # signals ever sent on each complete/reset.
     def barrier_signal(self, peer: int, epoch: int):
-        self._barrier.append((peer, epoch))
+        cell = self._barrier.get(epoch)
+        if cell is None:
+            cell = (np.zeros(self.num_peers, dtype=bool), 0)
+        seen, count = cell
+        if not seen[peer]:
+            seen[peer] = True
+            count += 1  # duplicate signals never over-count
+        self._barrier[epoch] = (seen, count)
 
     def barrier_complete(self, epoch: int) -> bool:
-        done = {p for (p, e) in self._barrier if e == epoch}
-        return len(done) == self.num_peers
+        cell = self._barrier.get(epoch)
+        return cell is not None and cell[1] == self.num_peers
 
     def barrier_reset(self, epoch: int):
-        self._barrier = [(p, e) for (p, e) in self._barrier if e != epoch]
+        self._barrier.pop(epoch, None)

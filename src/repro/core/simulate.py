@@ -454,7 +454,9 @@ class LocalP2PCluster:
                     *grads_peers.values(),
                 )
             else:
-                w = self._mixing[peer.rank]
+                # CSR-backed per-row weights — bit-equal to the dense
+                # matrix row, no P x P materialization on the hot path
+                w = self.graph.mixing_row(peer.rank)
                 ranks = sorted(grads_peers)
                 total = float(sum(w[j] for j in ranks))
                 avg = jax.tree.map(
@@ -578,6 +580,115 @@ class LocalP2PCluster:
             with peer.metrics.stage("model_update"):
                 self._apply_avg(peer, avg, self.detector.lr)
 
+    def _tree_exchange_sync(self, grads: Dict[int, Any], epoch: int):
+        """Hierarchical tree exchange (``tree[:fanout]`` host image).
+
+        Peers form the protocol's k-ary :class:`~repro.core.tree.TreePlan`
+        (rank 0 = root, parent of ``i`` is ``(i-1)//k``) and run two
+        sweeps over the mailbox, whole flattened buffers on the wire:
+
+        1. **up-sweep** — deepest level first: every non-root peer
+           publishes its partial sum (own gradient + consumed children)
+           to its ``shard=("up",)`` register; each hub fans in at most
+           ``fanout`` children instead of ``P - 1`` peers. The root
+           divides the global sum by ``P``.
+        2. **down-sweep** — root to leaves: each hub publishes the mean
+           once to its ``shard=("down",)`` register and all its children
+           read it (latest-wins broadcast: one upload per hub, one
+           download per child).
+
+        When a serverless executor is attached, each level's hub
+        aggregations are priced as one parallel invocation wave with
+        memory sized from buffer bytes — the per-level egress/wire
+        accounting the fig11 benchmark reads out.
+        """
+        plan, P = self.shard_plan, self.num_peers
+        tp = self.protocol.tree_plan(P)
+        partial: Dict[int, Any] = {}
+        # -- up-sweep: children publish partials, hubs fan in --------------
+        for level in range(tp.depth - 1, -1, -1):
+            start, stop = tp.level_bounds(level)
+            per_hub_s: List[float] = []
+            for r in range(start, stop):
+                peer = self.peers[r]
+                kids = tp.children(r)
+                t0 = time.perf_counter()
+                acc = plan.flatten(grads[r]).astype(jnp.float32)
+                with peer.metrics.stage("receive_gradients"):
+                    for c in kids:
+                        msg = self.mailbox.consume(c, consumer=r, shard=("up",))
+                        peer.recv_time_s += self.mailbox.download_time_s(
+                            msg, link=self.link
+                        )
+                        acc = acc + self.protocol.host_decode_shard(
+                            msg.payload, self.xctx
+                        )
+                jax.block_until_ready(acc)
+                if kids:
+                    per_hub_s.append(time.perf_counter() - t0)
+                partial[r] = acc
+                if r != 0:
+                    with peer.metrics.stage("send_gradients"):
+                        payload, nbytes = self.protocol.host_encode_shard(
+                            acc, self.xctx
+                        )
+                        wire_s = self.link.transfer_s(nbytes)
+                        self.mailbox.publish(
+                            r, payload, nbytes=nbytes, time=wire_s,
+                            epoch=epoch, shard=("up",),
+                        )
+                        peer.comm_bytes_sent += nbytes
+                        peer.send_time_s += wire_s
+            if (
+                per_hub_s
+                and self.executor is not None
+                and self.executor.backend == "serverless"
+            ):
+                # one parallel aggregation wave per hub level
+                self.aggregation_reports.append(
+                    self.executor.simulate_aggregation(
+                        per_hub_s,
+                        shard_bytes=plan.padded_size
+                        * jnp.dtype(self.xctx.wire_dtype).itemsize,
+                        num_contributions=tp.fanout + 1,
+                        epoch=epoch,
+                        link=self.link,
+                    )
+                )
+        # -- down-sweep: hubs relay the mean toward the leaves -------------
+        down: Dict[int, Any] = {0: partial[0] / P}
+        for level in range(tp.depth):
+            start, stop = tp.level_bounds(level)
+            for r in range(start, stop):
+                peer = self.peers[r]
+                if r != 0:
+                    with peer.metrics.stage("receive_gradients"):
+                        msg = self.mailbox.consume(
+                            tp.parent(r), consumer=r, shard=("down",)
+                        )
+                        peer.recv_time_s += self.mailbox.download_time_s(
+                            msg, link=self.link
+                        )
+                        down[r] = self.protocol.host_decode_shard(
+                            msg.payload, self.xctx
+                        )
+                if tp.children(r):
+                    with peer.metrics.stage("send_gradients"):
+                        payload, nbytes = self.protocol.host_encode_shard(
+                            down[r], self.xctx
+                        )
+                        wire_s = self.link.transfer_s(nbytes)
+                        self.mailbox.publish(
+                            r, payload, nbytes=nbytes, time=wire_s,
+                            epoch=epoch, shard=("down",),
+                        )
+                        peer.comm_bytes_sent += nbytes
+                        peer.send_time_s += wire_s
+        for peer in self.peers:
+            avg = plan.unflatten(down[peer.rank])
+            with peer.metrics.stage("model_update"):
+                self._apply_avg(peer, avg, self.detector.lr)
+
     def comm_cost(self, *, usd_per_gb: float = 0.0) -> CommCost:
         """Per-step wire cost of one peer under protocol + overlay graph.
 
@@ -655,7 +766,9 @@ class LocalP2PCluster:
                 f"every peer signalled completion before the consume phase"
             )
         self.mailbox.barrier_reset(epoch)
-        if sharded:
+        if sharded and self.protocol.hierarchical:
+            self._tree_exchange_sync(grads, epoch)
+        elif sharded:
             self._sharded_exchange_sync(grads, epoch)
         else:
             for peer in self.peers:

@@ -1,0 +1,255 @@
+"""Multi-level tree aggregation — hierarchical reduce through hub peers.
+
+Flat aggregation concentrates fan-in: under ``allgather_mean`` every peer
+downloads ``P - 1`` gradients per step, and under ``reduce_scatter`` every
+shard owner still fans in ``P - 1`` pieces in one round. SPIRT
+(arXiv:2309.14148) and LambdaML (arXiv:2105.07806) both identify exactly
+this per-peer coordination fan-in as the serverless scaling bottleneck.
+
+``tree[:fanout]`` bounds it. Peers form an implicit k-ary heap-indexed
+aggregation tree (:class:`TreePlan`): rank 0 is the root, rank ``i``'s
+parent is ``(i - 1) // k``. One step runs two sweeps over the mailbox:
+
+* **up-sweep** — leaves publish their gradient buffer; each hub consumes
+  its ≤ k children's partial sums, adds its own gradient, and publishes
+  ONE partial up. After ``depth - 1`` levels the root holds the global
+  sum and divides by ``P``.
+* **down-sweep** — the mean relays root → leaves: each hub publishes one
+  latest-wins register its children read, so a broadcast costs one
+  upload per hub regardless of fanout.
+
+Per-peer per-round fan-in is ``fanout`` instead of ``P - 1``, and no peer
+uploads more than 2 buffers (one up, one down relay) — the hub bottleneck
+of flat aggregation becomes ``O(log_k P)`` rounds of bounded-degree
+traffic. Total wire stays ``2 (P - 1)`` buffer messages (information flow
+is conserved; the accounting methods are honest about this).
+
+The buffer layout rides the PR-4 :class:`~repro.core.shard.ShardPlan`
+machinery: :class:`TreeAggregate` subclasses ``reduce_scatter`` to
+inherit its plan / shard-wire codec (the sharded-surface contract RC008),
+and the up/down payloads are the plan's flattened padded buffer encoded
+with the same ``host_encode_shard`` wire cast.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.exchange import ReduceScatterMean, register_exchange
+
+
+@dataclass(frozen=True)
+class TreePlan:
+    """Static k-ary heap-indexed aggregation tree over ``num_peers`` ranks.
+
+    Rank ``i``'s parent is ``(i - 1) // fanout``; its children are
+    ``fanout * i + 1 .. fanout * i + fanout`` (clipped to ``num_peers``).
+    Level ``l`` spans ranks ``[(k^l - 1) / (k - 1), (k^{l+1} - 1) / (k - 1))``
+    — contiguous, so a level is a range, not a list.
+    """
+
+    num_peers: int
+    fanout: int
+
+    def __post_init__(self):
+        if self.num_peers < 1:
+            raise ValueError(f"num_peers must be >= 1, got {self.num_peers}")
+        if self.fanout < 2:
+            raise ValueError(
+                f"tree fanout must be >= 2, got {self.fanout} "
+                "(a 1-ary tree is a chain with O(P) depth)"
+            )
+
+    # -- structure -----------------------------------------------------------
+    def parent(self, rank: int) -> Optional[int]:
+        """Parent rank, or ``None`` for the root."""
+        self._check(rank)
+        return None if rank == 0 else (rank - 1) // self.fanout
+
+    def children(self, rank: int) -> range:
+        """This rank's children (possibly empty, at most ``fanout``)."""
+        self._check(rank)
+        lo = self.fanout * rank + 1
+        return range(min(lo, self.num_peers),
+                     min(lo + self.fanout, self.num_peers))
+
+    def child_slot(self, rank: int) -> int:
+        """Which of its parent's ``fanout`` slots this (non-root) rank fills."""
+        self._check(rank)
+        if rank == 0:
+            raise ValueError("the root fills no child slot")
+        return (rank - 1) % self.fanout
+
+    def level_of(self, rank: int) -> int:
+        """Depth of ``rank`` (root = 0)."""
+        self._check(rank)
+        level = 0
+        while rank > 0:
+            rank = (rank - 1) // self.fanout
+            level += 1
+        return level
+
+    @property
+    def depth(self) -> int:
+        """Number of levels (1 for a single peer)."""
+        return self.level_of(self.num_peers - 1) + 1
+
+    def level_bounds(self, level: int) -> Tuple[int, int]:
+        """Rank range ``[start, stop)`` of one level (clipped to P)."""
+        if not 0 <= level < self.depth:
+            raise IndexError(f"level {level} out of range [0, {self.depth})")
+        k = self.fanout
+        start = (k ** level - 1) // (k - 1)
+        stop = (k ** (level + 1) - 1) // (k - 1)
+        return min(start, self.num_peers), min(stop, self.num_peers)
+
+    def levels(self) -> List[range]:
+        """All levels, root first."""
+        return [range(*self.level_bounds(l)) for l in range(self.depth)]
+
+    @property
+    def num_hubs(self) -> int:
+        """Interior nodes — the ranks that aggregate children."""
+        return sum(1 for r in range(self.num_peers) if len(self.children(r)))
+
+    def _check(self, rank: int):
+        if not 0 <= rank < self.num_peers:
+            raise IndexError(
+                f"rank {rank} out of range [0, {self.num_peers})"
+            )
+
+    def describe(self) -> str:
+        return (
+            f"TreePlan(P={self.num_peers}, fanout={self.fanout}, "
+            f"depth={self.depth}, hubs={self.num_hubs})"
+        )
+
+
+@register_exchange("tree")
+class TreeAggregate(ReduceScatterMean):
+    """Hierarchical k-ary tree mean: bounded fan-in, O(log_k P) rounds.
+
+    ``tree`` / ``tree:4`` — the parameter is the tree fanout (default 2).
+    Same estimator as ``allgather_mean`` / ``reduce_scatter`` (the exact
+    peer mean, modulo float re-association along tree edges — ≤1e-6 on
+    the equivalence rail), different traffic shape: every peer talks to
+    at most ``fanout + 1`` others per step instead of ``P - 1``.
+
+    Device path: masked ``ppermute`` up/down sweeps over the flattened
+    :class:`~repro.core.shard.ShardPlan` buffer — children forward
+    partial sums to parents one level at a time (one collective per
+    (level, child-slot) pair, so each permute is a valid one-to-one map),
+    the root divides by ``P``, and the mean relays back down.
+
+    Host image: :meth:`LocalP2PCluster._tree_exchange_sync` — hubs are
+    mailbox registers, each level's aggregations price as one parallel
+    serverless wave sized from buffer bytes.
+
+    The shard layout is inherently global (the root's sum covers ALL
+    peers), so sparse overlays are refused, like ``reduce_scatter``.
+    """
+
+    requires_full_graph = True
+    sharded = True
+    hierarchical = True
+
+    def __init__(self, param: Optional[str] = None):
+        self.fanout = 2 if param is None else int(param)
+        if self.fanout < 2:
+            raise ValueError(
+                f"tree fanout must be >= 2, got {self.fanout}"
+            )
+        self._plans: Dict[int, TreePlan] = {}
+
+    def tree_plan(self, num_peers: int) -> TreePlan:
+        """The (cached) aggregation tree for this peer count."""
+        plan = self._plans.get(num_peers)
+        if plan is None:
+            plan = self._plans[num_peers] = TreePlan(
+                max(int(num_peers), 1), self.fanout
+            )
+        return plan
+
+    def _check_full(self, ctx):
+        if ctx.mixing is not None:
+            raise ValueError(
+                "tree aggregation reduces over ALL peers through hub "
+                "ranks and the protocol only supports graph='full'; use "
+                "allgather_mean (or qsgd/topk) for sparse overlays"
+            )
+
+    # -- device path ---------------------------------------------------------
+    def combine(self, grads, ctx, *, key=None, state=None):
+        self._check_full(ctx)
+        P_ = int(ctx.num_peers)
+        plan = self.plan(grads, ctx)
+        acc = plan.flatten(grads).astype(jnp.float32)
+        if P_ == 1:
+            return plan.unflatten(acc), state
+        tp = self.tree_plan(P_)
+        r = lax.axis_index(ctx.axis)
+        # Up-sweep, deepest level first: children forward their finalized
+        # partial to the parent. Grouping the sends of one level by child
+        # slot makes each ppermute a one-to-one map (a parent receives
+        # from exactly one slot-s child); ranks outside the pairs receive
+        # zeros, so a plain add is a no-op for them.
+        for level in range(tp.depth - 1, 0, -1):
+            start, stop = tp.level_bounds(level)
+            for slot in range(tp.fanout):
+                pairs = [
+                    (i, (i - 1) // tp.fanout)
+                    for i in range(start, stop)
+                    if (i - 1) % tp.fanout == slot
+                ]
+                if not pairs:
+                    continue
+                recv = lax.ppermute(
+                    acc.astype(ctx.wire_dtype), ctx.axis, pairs
+                )
+                acc = acc + recv.astype(jnp.float32)
+        acc = acc / P_  # the root now holds the global mean; others, partials
+        # Down-sweep: each level's parents relay the mean to their children.
+        for level in range(tp.depth - 1):
+            nstart, nstop = tp.level_bounds(level + 1)
+            for slot in range(tp.fanout):
+                pairs = [
+                    ((i - 1) // tp.fanout, i)
+                    for i in range(nstart, nstop)
+                    if (i - 1) % tp.fanout == slot
+                ]
+                if not pairs:
+                    continue
+                recv = lax.ppermute(
+                    acc.astype(ctx.wire_dtype), ctx.axis, pairs
+                )
+                targets = jnp.asarray([t for _, t in pairs])
+                acc = jnp.where(
+                    jnp.any(r == targets), recv.astype(jnp.float32), acc
+                )
+        return plan.unflatten(acc), state
+
+    # -- accounting ----------------------------------------------------------
+    def wire_bytes_per_edge(self, grads_like, ctx) -> int:
+        """One tree hop carries the WHOLE flattened buffer (a partial sum
+        is as dense as the model), not a 1/P shard."""
+        plan = self.plan(grads_like, ctx)
+        return plan.padded_size * jnp.dtype(ctx.wire_dtype).itemsize
+
+    def wire_bytes(self, grads_like, ctx) -> int:
+        """Total tree traffic per step: P-1 up messages + P-1 down relays.
+
+        Same order as flat aggregation — a tree conserves information
+        flow; what it cuts is the per-peer fan-in (``fanout`` vs ``P-1``
+        downloads per round) and the hub upload (≤ 2 buffers per peer
+        regardless of P).
+        """
+        P_ = max(int(ctx.num_peers), 1)
+        return 2 * (P_ - 1) * self.wire_bytes_per_edge(grads_like, ctx)
+
+    def host_wire_bytes(self, grads_like, ctx) -> int:
+        """Mailbox publishes per peer per step: at most one partial up
+        plus one down relay (leaves publish 1, the root publishes 1)."""
+        return 2 * self.wire_bytes_per_edge(grads_like, ctx)

@@ -236,6 +236,8 @@ def test_sync_protocols_match_reference_mean_multidevice():
             ("allgather_mean", {}, 1e-6),
             ("psum_mean", {}, 1e-6),
             ("reduce_scatter", {}, 1e-6),  # sharded ring, same mean
+            ("tree", {}, 1e-6),  # binary tree reduce, same mean
+            ("tree:3", {}, 1e-6),  # non-dyadic fanout at P=4
             ("topk", {"topk_frac": 1.0}, 1e-6),  # k=n: lossless
             ("qsgd", {"qsgd": QSGDConfig(levels=127, bucket=64)}, 0.5),
             ("trimmed_mean:0", {}, 1e-6),  # zero trim IS the mean

@@ -78,6 +78,8 @@ def test_register_graph_extends_topology_names():
 @pytest.mark.parametrize("P", [2, 4, 8])
 @pytest.mark.parametrize("spec", ["full", "ring", "gossip:3", "hierarchical"])
 def test_mixing_matrix_properties(spec, P):
+    if spec == "gossip:3" and P <= 3:
+        pytest.skip("gossip:k now validates k < P")
     g = get_graph(spec, P, seed=1)
     W = g.mixing_matrix()
     # row-stochastic, symmetric => doubly stochastic
@@ -127,6 +129,18 @@ def test_gossip_is_seeded_and_min_degree():
     np.testing.assert_array_equal(a.adjacency, b.adjacency)
     assert not np.array_equal(a.adjacency, c.adjacency)  # seed matters
     assert int(a.degrees.min()) >= 3 and a.is_connected()
+
+
+def test_gossip_degree_validated_against_num_peers():
+    # regression: k >= P used to degrade silently (the round loop could
+    # never reach min-degree k); now it is a clean spec error naming both
+    with pytest.raises(ValueError, match=r"k=3.*num_peers=2"):
+        get_graph("gossip:3", 2)
+    with pytest.raises(ValueError, match=r"k=8.*num_peers=8"):
+        get_graph("gossip:8", 8)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        get_graph("gossip:0", 8)
+    assert int(get_graph("gossip:7", 8).degrees.min()) >= 7  # k = P-1 is fine
 
 
 def test_static_graph_from_edges():

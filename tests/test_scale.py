@@ -1,0 +1,301 @@
+"""Scaling-surface tests (PR 9): sparse graphs vs dense oracles, the
+batched fanout engine vs the legacy scalar engine, array-backed mailbox
+semantics, warm-pool stats, LinkModel edge cases, and the TreePlan /
+tree-exchange aggregation structure."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.events import (
+    BATCHED_FANOUT_MIN,
+    FanoutTimeout,
+    LinkModel,
+    RuntimeConfig,
+    ServerlessRuntime,
+)
+from repro.core.graph import DENSE_MATERIALIZE_LIMIT, get_graph
+from repro.core.mailbox import HostMailbox
+from repro.core.tree import TreePlan
+
+GRAPH_SPECS = ("full", "ring", "gossip:3", "hierarchical:4")
+
+
+# ---------------------------------------------------------------------------
+# Sparse overlays vs dense oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("P", [2, 8, 64])
+@pytest.mark.parametrize("spec", GRAPH_SPECS)
+def test_mixing_row_matches_dense_matrix(spec, P):
+    if spec == "gossip:3" and P <= 3:
+        pytest.skip("gossip validates k < P")
+    g = get_graph(spec, P, seed=0)
+    W = np.asarray(g.mixing_matrix())
+    for r in range(P):
+        # bit-equal, not allclose: both sides assemble the same MH terms
+        assert np.array_equal(g.mixing_row(r), W[r]), (spec, P, r)
+        assert np.array_equal(
+            g.neighbors_array(r), np.flatnonzero(np.asarray(g.adjacency)[r])
+        )
+
+
+@pytest.mark.parametrize("spec", GRAPH_SPECS)
+def test_power_iteration_gap_matches_dense_oracle(spec):
+    g = get_graph(spec, 64, seed=0)
+    dense = g.spectral_gap(method="dense")
+    power = g.spectral_gap(method="power")
+    # power converges at rate |λ3/λ2|: near-degenerate subdominant pairs
+    # (hierarchical at P=64) land ~1e-6 off the eigvalsh oracle
+    assert abs(dense - power) <= 5e-6, (spec, dense, power)
+
+
+def test_mix_apply_matches_dense_matvec():
+    rng = np.random.default_rng(0)
+    for spec in GRAPH_SPECS:
+        g = get_graph(spec, 32, seed=0)
+        W = np.asarray(g.mixing_matrix())
+        x = rng.standard_normal(32)
+        assert np.allclose(g.mix_apply(x), W @ x, atol=1e-12), spec
+        X = rng.standard_normal((32, 5))
+        assert np.allclose(g.mix_apply(X), W @ X, atol=1e-12), spec
+
+
+def test_dense_materialization_is_gated():
+    P = DENSE_MATERIALIZE_LIMIT + 1
+    g = get_graph("ring", P, seed=0)
+    with pytest.raises(ValueError, match="DENSE_MATERIALIZE_LIMIT"):
+        g.mixing_matrix()
+    with pytest.raises(ValueError, match="DENSE_MATERIALIZE_LIMIT"):
+        g.adjacency
+    # ...while the sparse surface keeps answering
+    assert g.degree(0) == 2
+    assert np.array_equal(g.neighbors_array(0), [1, P - 1])
+    assert abs(float(np.sum(g.mixing_row(0))) - 1.0) < 1e-12
+    assert g.is_connected()
+    assert 0.0 < g.spectral_gap() < 1.0
+
+
+def test_full_graph_is_implicit_at_scale():
+    # 1e5-peer full mesh: no CSR (1e10 edges), every query is analytic
+    g = get_graph("full", 100_000)
+    assert g.is_full and g.degree(7) == 99_999
+    assert g.spectral_gap() == 1.0
+    x = np.arange(100_000, dtype=np.float64)
+    assert np.allclose(g.mix_apply(x), x.mean())
+
+
+# ---------------------------------------------------------------------------
+# Batched fanout engine == legacy scalar engine (same seed, same records)
+# ---------------------------------------------------------------------------
+
+ENGINE_CONFIGS = {
+    "ideal": {},
+    "cold": dict(cold_start_s=2.0),
+    "capped": dict(concurrency_limit=8),
+    "faults": dict(failure_rate=0.2, straggler_prob=0.3),
+    "all": dict(
+        concurrency_limit=8, cold_start_s=2.0, failure_rate=0.2,
+        straggler_prob=0.3,
+    ),
+}
+
+RECORD_FIELDS = (
+    "submit_s", "start_s", "end_s", "exec_s", "download_s", "queue_wait_s",
+    "cold_start_s", "cold_starts", "straggler_factor", "attempts",
+    "retries", "backoff_s", "failed_s", "billed_s",
+)
+
+
+@pytest.mark.parametrize("name", sorted(ENGINE_CONFIGS))
+def test_batched_engine_matches_scalar(name):
+    kw = ENGINE_CONFIGS[name]
+    results = {}
+    for batched in (False, True):
+        rt = ServerlessRuntime(RuntimeConfig(seed=3, **kw))
+        times = np.random.default_rng(11).uniform(0.5, 1.5, 33)
+        # two consecutive fanouts: the second reuses the warm pool
+        first = rt.fanout(times, memory_mb=1792, batched=batched)
+        second = rt.fanout(times[::-1], memory_mb=1792, batched=batched)
+        results[batched] = (first, second, rt.clock, dict(rt.pool.stats))
+    for wave in (0, 1):
+        a, b = results[False][wave], results[True][wave]
+        assert a.makespan_s == pytest.approx(b.makespan_s, abs=1e-9)
+        for ra, rb in zip(a.invocations, b.invocations):
+            for f in RECORD_FIELDS:
+                assert float(getattr(ra, f)) == pytest.approx(
+                    float(getattr(rb, f)), abs=1e-9
+                ), (name, wave, ra.index, f)
+    assert results[False][2] == pytest.approx(results[True][2], abs=1e-9)
+    assert results[False][3] == results[True][3]  # pool hits/misses/expired
+
+
+def test_auto_batching_threshold():
+    rt = ServerlessRuntime()
+    small = rt.fanout(np.ones(4), memory_mb=1792)
+    big = rt.fanout(np.ones(BATCHED_FANOUT_MIN), memory_mb=1792)
+    assert len(small.invocations) == 4
+    assert len(big.invocations) == BATCHED_FANOUT_MIN
+    # both paths end with sorted record indices and absolute-time stamps
+    assert [r.index for r in big.invocations] == list(range(BATCHED_FANOUT_MIN))
+
+
+def test_batched_timeout_raises_like_scalar():
+    for batched in (False, True):
+        rt = ServerlessRuntime(
+            RuntimeConfig(failure_rate=1.0, max_retries=1, seed=0)
+        )
+        with pytest.raises(FanoutTimeout):
+            rt.fanout(
+                np.ones(300), memory_mb=1792, timeout_s=0.5, batched=batched
+            )
+
+
+# ---------------------------------------------------------------------------
+# Warm-container pool: O(1)-ish acquire + stats micro-assertions
+# ---------------------------------------------------------------------------
+
+def test_pool_stats_hits_misses_expired():
+    rt = ServerlessRuntime(RuntimeConfig(container_keepalive_s=10.0))
+    key = (0, 1792)
+    assert rt.pool.acquire(key, at=0.0) is False  # empty pool: miss
+    rt.pool.release(key, at=1.0)
+    rt.pool.release(key, at=2.0)
+    assert rt.pool.acquire(key, at=3.0) is True  # warm hit (LIFO: t=2)
+    assert rt.pool.acquire(key, at=20.0) is False  # t=1 expired by 11.0
+    assert rt.pool.stats == {"hits": 1, "misses": 2, "expired": 1}
+
+
+def test_pool_future_release_invisible_until_due():
+    rt = ServerlessRuntime()
+    key = (0, 1792)
+    rt.pool.release(key, at=5.0)  # staged by a batched wave
+    assert rt.pool.acquire(key, at=1.0) is False  # not warm *yet*
+    assert rt.pool.acquire(key, at=6.0) is True
+
+
+def test_pool_take_available_batch_claim():
+    rt = ServerlessRuntime(RuntimeConfig(container_keepalive_s=100.0))
+    key = (0, 1792)
+    for t in (1.0, 2.0, 3.0):
+        rt.pool.release(key, at=t)
+    assert rt.pool.take_available(key, at=4.0, want=5) == 3
+    assert rt.pool.stats["hits"] == 3
+    assert rt.pool.acquire(key, at=4.0) is False
+
+
+# ---------------------------------------------------------------------------
+# LinkModel edge cases
+# ---------------------------------------------------------------------------
+
+def test_link_transfer_edge_cases():
+    link = LinkModel(bandwidth_bps=1e9)
+    assert link.transfer_s(0) == 0.0
+    overhead = LinkModel(bandwidth_bps=1e9, per_message_overhead_s=0.25)
+    assert overhead.transfer_s(0) == 0.25  # framing charged even when empty
+    assert overhead.transfer_s(10**9 // 8) == pytest.approx(1.25)
+
+
+def test_download_time_with_raw_bandwidth_and_none_link():
+    from repro.core.mailbox import Message
+
+    mb = HostMailbox(2)
+    msg = Message(None, 0.0, 0, nbytes=1_000_000)
+    # link=None falls back to the raw bandwidth figure (no overhead term)
+    assert mb.download_time_s(msg, 1e9) == pytest.approx(0.008)
+    link = LinkModel(bandwidth_bps=1e9, per_message_overhead_s=0.1)
+    assert mb.download_time_s(msg, link=link) == pytest.approx(0.108)
+
+
+# ---------------------------------------------------------------------------
+# Array-backed mailbox semantics
+# ---------------------------------------------------------------------------
+
+def test_mailbox_latest_wins_and_live_counter():
+    mb = HostMailbox(4)
+    assert mb.live_messages == 0
+    mb.publish(1, "a", nbytes=10, time=1.0, epoch=0)
+    mb.publish(1, "b", nbytes=20, time=2.0, epoch=0)  # same-epoch replace
+    mb.publish(2, "c", nbytes=30, time=1.0, epoch=0, shard=("up",))
+    assert mb.live_messages == 2  # registers, not publishes
+    assert mb.stats["publishes"] == 3
+    assert mb.stats["compacted"] == 1
+    msg = mb.consume(1)
+    assert msg.payload == "b" and msg.nbytes == 20 and msg.publish_time == 2.0
+    assert mb.consume(2) is None  # default shard register is empty
+    assert mb.consume(2, shard=("up",)).payload == "c"
+    # time-gated visibility
+    assert mb.consume(1, at_time=1.5) is None
+    assert mb.consume(1, at_time=2.5).payload == "b"
+
+
+def test_mailbox_barrier_counts_distinct_signals():
+    mb = HostMailbox(3)
+    mb.barrier_signal(0, epoch=5)
+    mb.barrier_signal(0, epoch=5)  # duplicate never over-counts
+    mb.barrier_signal(1, epoch=5)
+    assert not mb.barrier_complete(5)
+    mb.barrier_signal(2, epoch=5)
+    assert mb.barrier_complete(5)
+    mb.barrier_reset(5)
+    assert not mb.barrier_complete(5)
+    mb.barrier_reset(5)  # idempotent
+
+
+# ---------------------------------------------------------------------------
+# TreePlan structure
+# ---------------------------------------------------------------------------
+
+def test_tree_plan_structure():
+    tp = TreePlan(10, 2)
+    assert tp.depth == 4
+    assert [list(l) for l in tp.levels()] == [[0], [1, 2], [3, 4, 5, 6],
+                                              [7, 8, 9]]
+    assert tp.parent(0) is None
+    for r in range(1, 10):
+        assert r in tp.children(tp.parent(r))
+        assert tp.child_slot(r) == (r - 1) % 2
+    assert tp.num_hubs == 5
+    assert tp.level_of(9) == 3
+
+
+def test_tree_plan_covers_every_rank_once():
+    for P, k in [(1, 2), (2, 2), (100, 3), (1000, 4)]:
+        tp = TreePlan(P, k)
+        seen = [r for lvl in tp.levels() for r in lvl]
+        assert sorted(seen) == list(range(P))
+        for r in range(P):
+            assert len(tp.children(r)) <= k
+
+
+def test_tree_plan_validates_fanout():
+    with pytest.raises(ValueError, match="fanout must be >= 2"):
+        TreePlan(8, 1)
+    from repro.core.exchange import get_exchange
+
+    with pytest.raises(ValueError, match="fanout must be >= 2"):
+        get_exchange("tree:1")
+    assert get_exchange("tree:4").fanout == 4
+    assert get_exchange("tree").fanout == 2
+
+
+# ---------------------------------------------------------------------------
+# Tree exchange accounting
+# ---------------------------------------------------------------------------
+
+def test_tree_wire_accounting_bounded_publish():
+    from repro.core.exchange import ExchangeContext, get_exchange
+
+    grads_like = {"w": jnp.zeros((64, 64), jnp.float32)}
+    tree = get_exchange("tree")
+    dense = get_exchange("allgather_mean")
+    for P in (4, 64, 1024):
+        ctx = ExchangeContext(num_peers=P)
+        buf = tree.wire_bytes_per_edge(grads_like, ctx)
+        # a hub publishes <= 2 buffers regardless of P...
+        assert tree.host_wire_bytes(grads_like, ctx) == 2 * buf
+        # ...total tree traffic is 2(P-1) hop messages...
+        assert tree.wire_bytes(grads_like, ctx) == 2 * (P - 1) * buf
+        # ...while a dense full-mesh peer's wire grows O(P)
+        assert dense.wire_bytes(grads_like, ctx) == pytest.approx(
+            dense.wire_bytes_per_edge(grads_like, ctx) * (P - 1)
+        )

@@ -301,9 +301,49 @@ def test_host_reduce_scatter_matches_allgather_mean():
     assert cc.wire_bytes_per_step == 2 * 2 * cc.bytes_per_edge
 
 
+@pytest.mark.slow
+def test_host_tree_matches_allgather_mean():
+    """tree[:fanout] hierarchical host exchange lands on the same mean:
+    hub fan-in + down-sweep relay == the flat all-gather average."""
+    ref = _cluster("allgather_mean")
+    trc = _cluster("tree")
+    for _ in range(2):
+        ref.run_epoch_sync(_)
+        trc.run_epoch_sync(_)
+    for r in range(3):
+        err = max(
+            float(jnp.abs(a - b).max())
+            for a, b in zip(
+                jax.tree.leaves(ref.peers[r].params),
+                jax.tree.leaves(trc.peers[r].params),
+            )
+        )
+        assert err <= 1e-6, (r, err)
+    # register traffic: P=3, fanout 2 -> ranks 1,2 publish up, the root
+    # publishes one down register; nothing else stays live
+    assert trc.mailbox.live_messages == 3
+    assert trc.mailbox.stats["blocked"] == 0
+    cc = trc.comm_cost()
+    # one tree hop carries the whole buffer: per-edge == P x shard bytes
+    assert cc.bytes_per_edge == 3 * cc.shard_bytes
+    assert cc.wire_bytes_per_step == 2 * 2 * cc.bytes_per_edge
+
+
+def test_tree_cluster_prices_per_level_aggregation():
+    shd = _cluster("tree", executor=ServerlessExecutor(backend="serverless"))
+    shd.run_epoch_sync(0)
+    # P=3 fanout 2: one hub level (the root fans in both children)
+    assert len(shd.aggregation_reports) == 1
+    rep = shd.aggregation_reports[0]
+    assert rep.num_batches == 1  # one hub invocation at that level
+    assert rep.backend == "serverless"
+
+
 def test_sharded_cluster_rejects_async_mode():
     with pytest.raises(ValueError, match="sync"):
         _cluster("reduce_scatter", sync=False)
+    with pytest.raises(ValueError, match="sync"):
+        _cluster("tree", sync=False)
 
 
 def test_sharded_cluster_prices_parallel_aggregators():
