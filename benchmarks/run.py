@@ -32,6 +32,7 @@ def main() -> None:
         fig11_engine_scaling,
         fig12_byzantine,
         fig13_fused_compression,
+        fig14_auto_scheduler,
         roofline,
         table1_resource_stages,
         table2_3_cost,
@@ -52,6 +53,7 @@ def main() -> None:
         "fig11": fig11_engine_scaling,
         "fig12": fig12_byzantine,
         "fig13": fig13_fused_compression,
+        "fig14": fig14_auto_scheduler,
         "roofline": roofline,
     }
     if args.only:

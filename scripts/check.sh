@@ -47,6 +47,10 @@ for n in available_graphs():
   # fast rails only (kernel==jnp equivalence, wire accounting, EF finite);
   # the full retention/timing run is `python -m benchmarks.run --only fig13`
   python -m benchmarks.fig13_fused_compression --smoke
+  echo "== smoke: heterogeneous-fleet auto-scheduler rails (Fig. 14) =="
+  # tiny workload, core candidate set: scheduler==exhaustive, deadline
+  # never violated, mixed-fleet dominance, pure-fleet==PR5 <=1e-6
+  python -m benchmarks.fig14_auto_scheduler --smoke
   echo "== smoke: analysis suite (lint + contracts + trace + links) =="
   # full four-pass suite, JSON report artifact for CI; the trace pass
   # double-runs the seeded simulators and asserts identical digests

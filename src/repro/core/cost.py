@@ -16,7 +16,7 @@ TPU backend (for the roofline work): chip-seconds at an on-demand v5e rate.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 LAMBDA_USD_PER_GB_S_ARM = 0.0000133334
 LAMBDA_USD_PER_REQUEST = 0.20 / 1_000_000
@@ -52,6 +52,64 @@ EC2_VCPUS = {
     "t2.xlarge": 4,
 }
 
+# ---------------------------------------------------------------------------
+# GPU instance tiers (heterogeneous-fleet extension)
+# ---------------------------------------------------------------------------
+# The 2025 follow-up ("Cost-Performance Analysis: CPU-Based Serverless vs
+# GPU-Based Training Architectures") argues the real decision space is
+# CPU-serverless vs GPU instances vs mixed fleets. These are single-GPU AWS
+# on-demand tiers (us-east-1 list prices at paper time): per-hour price,
+# device (HBM) memory bounding the resident working set, wall-clock speedup
+# of one training epoch vs the 1-vCPU CPU reference the per-batch times are
+# measured on (compute-bound training), and provisioning/boot time (AMI
+# pull + driver/CUDA init — materially slower than a t2 boot).
+
+GPU_USD_PER_HOUR = {
+    "g4dn.xlarge": 0.526,  # 1x T4 (16 GB)
+    "g5.xlarge": 1.006,  # 1x A10G (24 GB)
+    "p3.2xlarge": 3.06,  # 1x V100 (16 GB)
+}
+
+GPU_MEMORY_MB = {
+    "g4dn.xlarge": 16_384,
+    "g5.xlarge": 24_576,
+    "p3.2xlarge": 16_384,
+}
+
+# Epoch-compute speedup vs the 1-vCPU reference machine (the same baseline
+# `EC2_VCPUS` scales against), i.e. "equivalent vCPUs" of the device on
+# this workload class. Conservative mid-size-CNN figures.
+GPU_SPEEDUP = {
+    "g4dn.xlarge": 8.0,
+    "g5.xlarge": 16.0,
+    "p3.2xlarge": 24.0,
+}
+
+GPU_BOOT_S = {
+    "g4dn.xlarge": 60.0,
+    "g5.xlarge": 60.0,
+    "p3.2xlarge": 90.0,
+}
+
+# Unified tier views: every InstanceRuntime surface (pricing, memory fit,
+# compute scaling) resolves tiers through these, so GPU and CPU instances
+# ride the same billing/boot/churn machinery.
+INSTANCE_USD_PER_HOUR = {**EC2_USD_PER_HOUR, **GPU_USD_PER_HOUR}
+INSTANCE_MEMORY_MB = {**EC2_MEMORY_MB, **GPU_MEMORY_MB}
+
+
+def is_gpu_instance(instance: str) -> bool:
+    return instance in GPU_USD_PER_HOUR
+
+
+def instance_equivalent_vcpus(instance: str) -> float:
+    """Compute speed of a tier in 1-vCPU-reference units: vCPU count for
+    CPU tiers, the measured epoch speedup for GPU tiers."""
+    if instance in GPU_SPEEDUP:
+        return GPU_SPEEDUP[instance]
+    return float(EC2_VCPUS[instance])
+
+
 TPU_V5E_USD_PER_CHIP_HOUR = 1.20
 
 
@@ -68,7 +126,9 @@ def working_set_mb(
 
 
 def ec2_cost_per_second(instance: str) -> float:
-    return EC2_USD_PER_HOUR[instance] / 3600.0
+    """Per-second on-demand price of any instance tier — CPU (t2.*) or GPU
+    (g4dn/g5/p3) — so :class:`InstanceCost` prices GPU fleets unchanged."""
+    return INSTANCE_USD_PER_HOUR[instance] / 3600.0
 
 
 def lambda_cost_per_second(memory_mb: int) -> float:
@@ -243,7 +303,7 @@ class CostReport:
     to 5.4x the cost — is a pair of these and two method calls.
     """
 
-    backend: str  # "serverless" | "instance"
+    backend: str  # "serverless" | "instance" | "fleet" (heterogeneous mix)
     wall_time_s: float
     cost_usd: float  # per peer per epoch
     instance: str = ""  # EC2 tier (baseline VM or serverless orchestrator)
@@ -278,11 +338,20 @@ class CostReport:
         return s
 
 
-def compare_backends(serverless: CostReport, instance: CostReport) -> Dict[str, float]:
+def compare_backends(
+    serverless: CostReport,
+    instance: CostReport,
+    fleet: Optional[CostReport] = None,
+) -> Dict[str, float]:
     """The paper's headline comparison as one dict: speedup % and cost
     multiple of the serverless point over the instance baseline, plus the
-    raw coordinates of both points (handy for JSON benchmark records)."""
-    return {
+    raw coordinates of both points (handy for JSON benchmark records).
+
+    ``fleet`` mode: pass a third (heterogeneous-fleet) point and the dict
+    additionally carries its coordinates and its speedup/cost-multiple
+    over the same instance baseline — the three-way comparison the
+    auto-scheduler navigates (fig14)."""
+    out = {
         "speedup_pct": serverless.speedup_pct_vs(instance),
         "cost_multiple": serverless.cost_multiple_vs(instance),
         "serverless_wall_s": serverless.wall_time_s,
@@ -290,20 +359,63 @@ def compare_backends(serverless: CostReport, instance: CostReport) -> Dict[str, 
         "serverless_usd": serverless.cost_usd,
         "instance_usd": instance.cost_usd,
     }
+    if fleet is not None:
+        out.update({
+            "fleet_wall_s": fleet.wall_time_s,
+            "fleet_usd": fleet.cost_usd,
+            "fleet_speedup_pct": fleet.speedup_pct_vs(instance),
+            "fleet_cost_multiple": fleet.cost_multiple_vs(instance),
+        })
+    return out
+
+
+def dominates(a: CostReport, b: CostReport) -> bool:
+    """True iff ``a`` Pareto-dominates ``b``: at least as fast AND at
+    least as cheap, strictly better in at least one coordinate. Two points
+    with identical coordinates never dominate each other."""
+    return (
+        a.wall_time_s <= b.wall_time_s
+        and a.cost_usd <= b.cost_usd
+        and (a.wall_time_s < b.wall_time_s or a.cost_usd < b.cost_usd)
+    )
+
+
+def _frontier_key(p: CostReport):
+    # A TOTAL order over CostReports: (wall, cost) first, then every
+    # identity field as a deterministic tie-break — so equal-coordinate
+    # points sort the same way under any input permutation and the
+    # frontier's membership/order never depends on arrival order.
+    return (
+        p.wall_time_s, p.cost_usd,
+        p.backend, p.instance, p.label, p.lambda_memory_mb, p.num_peers,
+    )
 
 
 def pareto_frontier(points: Sequence[CostReport]) -> List[CostReport]:
     """The non-dominated subset of (wall_time_s, cost_usd) points, sorted
     by wall-clock ascending — the cost–time frontier a deployment actually
     chooses from. A point survives iff no other point is at least as fast
-    AND at least as cheap (strictly better in one coordinate)."""
-    pts = sorted(points, key=lambda p: (p.wall_time_s, p.cost_usd))
+    AND at least as cheap (strictly better in one coordinate).
+
+    Coordinate ties are kept, not evicted: two reports with equal wall AND
+    equal cost do not dominate each other, so both stay on the frontier
+    (previously the later-sorted one was silently dropped, which made the
+    frontier's membership depend on input order)."""
+    pts = sorted(points, key=_frontier_key)
     frontier: List[CostReport] = []
     best_cost = float("inf")
+    best_wall = float("inf")
     for p in pts:
         if p.cost_usd < best_cost:
             frontier.append(p)
             best_cost = p.cost_usd
+            best_wall = p.wall_time_s
+        # intentionally EXACT: only bit-identical coordinates are mutual
+        # non-domination ties; approximate ties are real dominations
+        elif p.cost_usd == best_cost and p.wall_time_s == best_wall:  # noqa: RA006
+            # exact coordinate tie with the last frontier point: mutually
+            # non-dominated, keep both
+            frontier.append(p)
     return frontier
 
 

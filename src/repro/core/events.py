@@ -208,6 +208,18 @@ class InstanceConfig:
             churn_downtime_s=30.0,
         )
 
+    @staticmethod
+    def gpu_default(boot_s: float = 90.0) -> "InstanceConfig":
+        """GPU fleet preset: markedly slower provisioning (GPU AMI pull +
+        driver/CUDA init) than a t2 boot, same interruption shape. The
+        per-tier figure lives in :data:`repro.core.cost.GPU_BOOT_S` —
+        pass it here (this module stays dollar/tier-agnostic)."""
+        return InstanceConfig(
+            boot_s=float(boot_s),
+            churn_prob=0.002,
+            churn_downtime_s=30.0,
+        )
+
 
 @dataclass
 class InstanceEpochResult:

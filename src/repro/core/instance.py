@@ -50,7 +50,12 @@ from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.cost import EC2_MEMORY_MB, EC2_VCPUS, InstanceCost, working_set_mb
+from repro.core.cost import (
+    INSTANCE_MEMORY_MB,
+    InstanceCost,
+    instance_equivalent_vcpus,
+    working_set_mb,
+)
 from repro.core.events import (
     EventEngine,
     InstanceConfig,
@@ -74,12 +79,13 @@ def instance_splits(
     """Micro-batches one batch must be split into to fit the tier's memory.
 
     Returns the smallest ``k`` such that ``2*model + 3*batch/k + runtime``
-    fits in :data:`~repro.core.cost.EC2_MEMORY_MB` — 1 when unconstrained
-    (the paper's comfortable case), >1 in the resource-constrained
-    scenario. Raises when even ``k -> inf`` cannot fit (the model itself
-    overflows the tier), mirroring the Lambda-cap check in the planner.
+    fits in :data:`~repro.core.cost.INSTANCE_MEMORY_MB` (CPU tiers use
+    host RAM, GPU tiers use device memory) — 1 when unconstrained (the
+    paper's comfortable case), >1 in the resource-constrained scenario.
+    Raises when even ``k -> inf`` cannot fit (the model itself overflows
+    the tier), mirroring the Lambda-cap check in the planner.
     """
-    mem_mb = EC2_MEMORY_MB[instance]
+    mem_mb = INSTANCE_MEMORY_MB[instance]
     fixed_mb = working_set_mb(model_bytes, 0, runtime_overhead_mb)
     if fixed_mb > mem_mb:
         raise ValueError(
@@ -104,11 +110,16 @@ def instance_splits(
 def instance_speedup(instance: str, reference_vcpus: Optional[float]) -> float:
     """Tier compute speed relative to the machine the per-batch times were
     measured on. ``None`` means "measured on this tier" (the legacy
-    convention — no scaling); otherwise vCPU share scales linearly with
-    the same 0.25 floor as :func:`repro.core.serverless.lambda_speedup`."""
+    convention — no scaling); otherwise the tier's equivalent-vCPU share
+    (:func:`repro.core.cost.instance_equivalent_vcpus` — real vCPUs for
+    CPU tiers, the calibrated GPU speedup factor for GPU tiers) scales
+    linearly with the same 0.25 floor as
+    :func:`repro.core.serverless.lambda_speedup`."""
     if reference_vcpus is None:
         return 1.0
-    return max(EC2_VCPUS[instance] / float(reference_vcpus), 0.25)
+    return max(
+        instance_equivalent_vcpus(instance) / float(reference_vcpus), 0.25
+    )
 
 
 class InstanceRuntime:
@@ -129,15 +140,17 @@ class InstanceRuntime:
         *,
         instance: str = "t2.large",
         split_overhead_s: float = 0.05,  # per extra micro-batch: reload + accumulate
+        tracer: Any = None,
     ):
-        if instance not in EC2_MEMORY_MB:
+        if instance not in INSTANCE_MEMORY_MB:
             raise ValueError(
-                f"unknown EC2 tier {instance!r}; known tiers: "
-                f"{', '.join(sorted(EC2_MEMORY_MB))}"
+                f"unknown instance tier {instance!r}; known tiers: "
+                f"{', '.join(sorted(INSTANCE_MEMORY_MB))}"
             )
         self.config = config or InstanceConfig()
         self.instance = instance
         self.split_overhead_s = split_overhead_s
+        self.tracer = tracer
         self.rng = np.random.default_rng(self.config.seed)
         self.clock = 0.0  # deployment-lifetime clock; VMs stay up on it
         self.epochs_run = 0
@@ -175,7 +188,16 @@ class InstanceRuntime:
             )
         if submit_time is None:
             submit_time = self.clock
-        engine = EventEngine(rng=self.rng)
+        if self.tracer is not None:
+            self.tracer.record(
+                "instance_epoch",
+                instance=self.instance,
+                peer=peer,
+                batches=len(exec_times_s),
+                splits=max(int(splits), 1),
+                submit=float(submit_time),
+            )
+        engine = EventEngine(rng=self.rng, tracer=self.tracer)
         engine.now = float(submit_time)
         res = InstanceEpochResult(splits=max(int(splits), 1))
         times: List[float] = [

@@ -267,6 +267,7 @@ class ServerlessExecutor:
         peer: Any = 0,
         egress_bytes: int = 0,
         usd_per_gb_egress: float = 0.0,
+        memory_mb: Optional[int] = None,
     ) -> ExecutionReport:
         """Account measured instance-side batch times under the runtime.
 
@@ -276,6 +277,9 @@ class ServerlessExecutor:
         degree-aware exchange traffic for the epoch (per-edge payload x
         overlay degree, from ``ExchangeProtocol.wire_bytes``); it is billed
         at ``usd_per_gb_egress`` on top of the Lambda formula.
+        ``memory_mb`` pins this peer's Lambda tier explicitly (a
+        ``FleetPlan`` assignment), bypassing the allocation policy; it is
+        still clamped to [fit floor, Lambda cap] on the 64 MB grid.
         """
         per_batch = [float(t) for t in per_batch_s]
         measured = float(sum(per_batch))
@@ -287,7 +291,14 @@ class ServerlessExecutor:
             num_batches=len(per_batch),
             instance_vcpus=self.instance_vcpus,
         )
-        mem = self._memory_mb(plan.lambda_spec.memory_mb, epoch, peer)
+        if memory_mb is None:
+            mem = self._memory_mb(plan.lambda_spec.memory_mb, epoch, peer)
+        else:
+            mem = max(
+                plan.lambda_spec.memory_mb,
+                min(int(memory_mb), LAMBDA_MAX_MEMORY_MB),
+            )
+            mem = int(math.ceil(mem / 64.0) * 64)
         speed = lambda_speedup(mem, self.instance_vcpus)
         lam_times = [t / speed + self.invoke_overhead_s for t in per_batch]
         if lam_times and max(lam_times) > LAMBDA_TIMEOUT_S:

@@ -21,8 +21,9 @@ from repro import compat, models
 from repro.configs import get_config, reduced
 from repro.core.compression import QSGDConfig
 from repro.core.convergence import ConvergenceDetector
-from repro.core.cost import EC2_MEMORY_MB
+from repro.core.cost import INSTANCE_MEMORY_MB
 from repro.core.events import InstanceConfig, RuntimeConfig, available_allocations
+from repro.core.scheduler import available_schedulers
 from repro.core.exchange import available_exchanges, get_exchange
 from repro.core.p2p import Topology
 from repro.core.robust import ATTACK_KINDS, AdversarySpec
@@ -127,8 +128,9 @@ def main(argv=None):
                     choices=["serverless", "instance"],
                     help="which accounting model prices the measured steps")
     ap.add_argument("--instance-type", default="t2.large",
-                    choices=sorted(EC2_MEMORY_MB),
-                    help="EC2 tier of the instance baseline")
+                    choices=sorted(INSTANCE_MEMORY_MB),
+                    help="instance tier of the baseline: CPU (t2.*) or "
+                         "GPU (g4dn/g5/p3)")
     ap.add_argument("--boot-s", type=float, default=None,
                     help="instance: VM provision+boot seconds (billed)")
     ap.add_argument("--instance-churn-prob", type=float, default=None,
@@ -136,6 +138,16 @@ def main(argv=None):
     ap.add_argument("--cost-report", action="store_true",
                     help="price the measured steps under BOTH backends at "
                          "exit and print the cost-time frontier comparison")
+    # cost-aware auto-scheduler (repro.core.scheduler)
+    ap.add_argument("--scheduler", default=None,
+                    choices=list(available_schedulers()),
+                    help="pick next epoch's fleet plan from measured step "
+                         "times at exit: sweeps serverless tiers, CPU/GPU "
+                         "instances, and a mixed fleet")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="scheduler: epoch wall-clock deadline in seconds")
+    ap.add_argument("--budget-usd", type=float, default=None,
+                    help="scheduler: whole-cluster epoch budget in dollars")
     args = ap.parse_args(argv)
 
     import dataclasses as _dc
@@ -205,7 +217,8 @@ def main(argv=None):
     trainer = P2PTrainer(cfg, opt, topo, mesh, sched,
                          runtime=runtime, allocation=args.allocation,
                          backend=args.backend, instance_type=args.instance_type,
-                         instance_config=instance_cfg, adversary=adversary)
+                         instance_config=instance_cfg, adversary=adversary,
+                         scheduler=args.scheduler)
     if adversary is not None:
         print(f"adversary: {adversary.describe()} "
               f"(attackers={sorted(adversary.attackers(npeers))})")
@@ -239,7 +252,7 @@ def main(argv=None):
                 )
                 ts = time.time()
                 state, metrics = trainer.step(state, batch)
-                if args.serverless_report or args.cost_report:
+                if args.serverless_report or args.cost_report or args.scheduler:
                     jax.block_until_ready(state.params)
                     step_times.append(time.time() - ts)
                 if (i + 1) % args.log_every == 0 or i == 0:
@@ -252,7 +265,8 @@ def main(argv=None):
                     if detector.step(loss):
                         print("converged (early stop)")
                         break
-    if (args.serverless_report or args.cost_report) and step_times:
+    if (args.serverless_report or args.cost_report or args.scheduler) \
+            and step_times:
         # skip step 0 (compilation); one "epoch" = the measured step batch
         times = step_times[1:] or step_times
         if args.serverless_report and args.backend == "instance":
@@ -298,6 +312,33 @@ def main(argv=None):
                 f"{fr['instance_wall_s']:.2f}s/${fr['instance_usd']:.6f} "
                 f"per peer-epoch)"
             )
+        if args.scheduler:
+            # every peer runs the same measured step batch: the scheduler
+            # sweeps serverless tiers, CPU/GPU instances, and a mixed
+            # fleet, then picks under the deadline/budget
+            per_peer = [list(times)] * max(npeers, 2)
+            try:
+                pick = trainer.schedule_epoch(
+                    per_peer,
+                    deadline_s=args.deadline_s,
+                    budget_usd=args.budget_usd,
+                )
+            except ValueError as e:
+                print(f"scheduler [{args.scheduler}]: infeasible — {e}")
+            else:
+                rep = pick["report"]
+                constraints = []
+                if args.deadline_s is not None:
+                    constraints.append(f"deadline {args.deadline_s:g}s")
+                if args.budget_usd is not None:
+                    constraints.append(f"budget ${args.budget_usd:g}")
+                print(
+                    f"scheduler [{args.scheduler}"
+                    f"{' | ' + ', '.join(constraints) if constraints else ''}]: "
+                    f"chose {pick['plan'].describe()} — epoch wall "
+                    f"{rep.wall_time_s:.2f}s, cluster ${rep.total_usd:.6f} "
+                    f"({len(pick['candidates'])} candidates measured)"
+                )
     if args.checkpoint:
         trainer.save(args.checkpoint, state)
         print(f"saved checkpoint to {args.checkpoint}")

@@ -38,6 +38,15 @@ from repro.core.p2p import (
     init_ef,
 )
 from repro.core.robust import AdversarySpec
+from repro.core.scheduler import (
+    FleetExecutor,
+    FleetPlan,
+    FleetReport,
+    Scheduler,
+    evaluate_candidates,
+    get_scheduler,
+    standard_candidates,
+)
 from repro.core.serverless import ExecutionReport, ServerlessExecutor
 from repro.core.shard import ShardPlan
 from repro.optim import Optimizer
@@ -68,6 +77,7 @@ class P2PTrainer:
         instance_config: Optional[InstanceConfig] = None,  # boot/churn model
         adversary: Optional[AdversarySpec] = None,  # Byzantine peers on the mesh
         ef: Optional[bool] = None,  # error feedback override (else topo.ef)
+        scheduler: Union[str, Scheduler, None] = None,  # cost-aware plan picker
     ):
         import dataclasses as _dc
 
@@ -87,10 +97,17 @@ class P2PTrainer:
         self.backend = backend
         self.instance_type = instance_type
         self.instance_config = instance_config or InstanceConfig()
+        # raw arg, so FleetExecutor's per-tier defaults (GPU boot preset)
+        # apply unless the caller explicitly pinned a config
+        self._fleet_instance_config = instance_config
         self.runtime_config = runtime or RuntimeConfig()
         self.allocation = allocation
+        if isinstance(scheduler, str):
+            scheduler = get_scheduler(scheduler)
+        self.scheduler: Optional[Scheduler] = scheduler
         self._serverless: Optional[ServerlessExecutor] = None
         self._instance_executor: Optional[ServerlessExecutor] = None
+        self._fleet: Optional[FleetExecutor] = None
         self.protocol: ExchangeProtocol = topo.protocol()
         self.ctx = exchange_context(topo, mesh)
         if loss_fn is None:
@@ -351,6 +368,92 @@ class P2PTrainer:
         sr = s.cost_report(num_peers=self.num_peers, label="serverless")
         ir = i.cost_report(num_peers=self.num_peers, label=self.instance_type)
         return {"serverless": sr, "instance": ir, **compare_backends(sr, ir)}
+
+    @property
+    def fleet_executor(self) -> FleetExecutor:
+        """The trainer's heterogeneous-fleet accountant: Lambda peers on
+        the configured serverless runtime, instance peers on one VM fleet
+        per tier (GPU tiers default to the GPU boot preset unless an
+        ``instance_config`` was pinned). Warm pools and VM state persist
+        across :meth:`account_fleet` calls."""
+        if self._fleet is None:
+            self._fleet = FleetExecutor(
+                runtime=self.runtime_config,
+                instance_config=self._fleet_instance_config,
+                allocation=(
+                    self.allocation
+                    if isinstance(self.allocation, str)
+                    else "static"
+                ),
+            )
+        return self._fleet
+
+    def account_fleet(
+        self,
+        plan: FleetPlan,
+        per_peer_batch_s: Sequence[Sequence[float]],
+        *,
+        batch_bytes: int = 0,
+        epoch: Optional[int] = None,
+    ) -> FleetReport:
+        """Price one heterogeneous fleet epoch: ``per_peer_batch_s[rank]``
+        runs on ``plan.assignments[rank]``'s backend; epoch wall is the
+        max over per-peer makespans, cost the sum over per-peer bills
+        (instance peers bill their barrier idle). The fleet counterpart
+        of :meth:`account_serverless` / :meth:`account_instance`."""
+        return self.fleet_executor.run_epoch(
+            plan,
+            per_peer_batch_s,
+            model_bytes=self.model_bytes,
+            batch_bytes=batch_bytes,
+            epoch=epoch,
+        )
+
+    def schedule_epoch(
+        self,
+        per_peer_batch_s: Sequence[Sequence[float]],
+        *,
+        batch_bytes: int = 0,
+        candidates: Optional[Sequence[FleetPlan]] = None,
+        deadline_s: Optional[float] = None,
+        budget_usd: Optional[float] = None,
+        warm: bool = True,
+    ) -> dict:
+        """Let the configured scheduler pick next epoch's plan.
+
+        Measures every candidate plan on fresh executors
+        (:func:`repro.core.scheduler.evaluate_candidates`, steady-state
+        when ``warm``) against this epoch's measured per-peer batch times,
+        then asks ``self.scheduler`` to choose under the deadline/budget.
+        Returns ``{"plan", "report", "index", "candidates"}`` — the chosen
+        :class:`FleetPlan`, its measured ``CostReport``, its index, and
+        all candidates' reports (the frontier the choice was made on)."""
+        if self.scheduler is None:
+            raise ValueError(
+                "no scheduler configured; construct "
+                "P2PTrainer(scheduler='cheapest_under_deadline' | "
+                "'fastest_under_budget' | 'pareto_walk')"
+            )
+        if candidates is None:
+            candidates = standard_candidates(len(per_peer_batch_s))
+        reports = evaluate_candidates(
+            candidates,
+            per_peer_batch_s,
+            model_bytes=self.model_bytes,
+            batch_bytes=batch_bytes,
+            warm=warm,
+            runtime=self.runtime_config,
+            instance_config=self._fleet_instance_config,
+        )
+        idx = self.scheduler.choose(
+            reports, deadline_s=deadline_s, budget_usd=budget_usd
+        )
+        return {
+            "plan": candidates[idx],
+            "report": reports[idx],
+            "index": idx,
+            "candidates": list(reports),
+        }
 
     def account_aggregation(
         self,

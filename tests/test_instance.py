@@ -9,9 +9,17 @@ from repro.core.cost import (
     CostReport,
     EC2_MEMORY_MB,
     EC2_VCPUS,
+    GPU_BOOT_S,
+    GPU_MEMORY_MB,
+    GPU_SPEEDUP,
+    GPU_USD_PER_HOUR,
+    INSTANCE_MEMORY_MB,
     InstanceCost,
     compare_backends,
+    dominates,
     ec2_cost_per_second,
+    instance_equivalent_vcpus,
+    is_gpu_instance,
     pareto_frontier,
 )
 from repro.core.events import InstanceConfig, LinkModel
@@ -297,6 +305,101 @@ def test_resource_constrained_comparison_has_the_paper_shape():
 def test_unknown_tier_rejected():
     with pytest.raises(ValueError, match="known tiers"):
         InstanceRuntime(instance="p5.48xlarge")
+
+
+# ---------------------------------------------------------------------------
+# GPU instance tiers: same runtime machinery, GPU prices/memory/speedups
+# ---------------------------------------------------------------------------
+
+def test_gpu_tier_tables_are_consistent():
+    assert set(GPU_USD_PER_HOUR) == set(GPU_MEMORY_MB)
+    assert set(GPU_USD_PER_HOUR) == set(GPU_SPEEDUP) == set(GPU_BOOT_S)
+    for tier in GPU_USD_PER_HOUR:
+        assert is_gpu_instance(tier)
+        assert tier in INSTANCE_MEMORY_MB  # merged view sees GPU tiers
+        assert ec2_cost_per_second(tier) == pytest.approx(
+            GPU_USD_PER_HOUR[tier] / 3600.0
+        )
+        # a GPU runs the reference workload faster than any t2 CPU tier
+        assert instance_equivalent_vcpus(tier) > max(EC2_VCPUS.values())
+    assert not is_gpu_instance("t2.large")
+    assert instance_equivalent_vcpus("t2.large") == EC2_VCPUS["t2.large"]
+
+
+def test_gpu_tier_splits_against_device_memory():
+    # VGG11-scale + large batch fit a 16 GB device comfortably...
+    assert instance_splits(int(531e6), int(160e6), "g4dn.xlarge") == 1
+    # ...but a model bigger than HBM is refused like any CPU tier
+    with pytest.raises(ValueError, match="larger tier"):
+        instance_splits(int(9e9), int(1e6), "g4dn.xlarge")
+
+
+def test_gpu_speedup_scales_reference_times():
+    # times measured on the 1-vCPU reference run GPU_SPEEDUP x faster
+    assert instance_speedup("p3.2xlarge", 1.0) == GPU_SPEEDUP["p3.2xlarge"]
+    assert instance_speedup("p3.2xlarge", None) == 1.0  # legacy convention
+
+
+def test_gpu_peer_priced_with_boot_and_idle():
+    """InstanceRuntime prices a GPU peer end-to-end: boot billed at the
+    GPU rate, compute scaled by the GPU speedup, barrier idle billed."""
+    boot = GPU_BOOT_S["p3.2xlarge"]
+    ex = ServerlessExecutor(
+        backend="instance", instance="p3.2xlarge",
+        instance_config=InstanceConfig.gpu_default(boot),
+    )
+    rep = ex.simulate_instance(
+        [24.0, 24.0], model_bytes=int(531e6), batch_bytes=int(8e6),
+        reference_vcpus=1.0, barrier_wait_s=3.0,
+    )
+    gpu_s = 48.0 / GPU_SPEEDUP["p3.2xlarge"]  # 2 s of device compute
+    assert rep.boot_s == pytest.approx(boot)
+    assert rep.wall_time_s == pytest.approx(boot + gpu_s + 3.0)
+    assert rep.instance_billed_s == pytest.approx(boot + gpu_s + 3.0)
+    assert rep.cost_usd == pytest.approx(
+        ec2_cost_per_second("p3.2xlarge") * (boot + gpu_s + 3.0)
+    )
+    # warm epoch: no boot, pure device compute
+    warm = ex.simulate_instance([24.0, 24.0], reference_vcpus=1.0)
+    assert warm.boot_s == 0.0
+    assert warm.wall_time_s == pytest.approx(gpu_s)
+
+
+def test_gpu_default_preset_shape():
+    cfg = InstanceConfig.gpu_default(90.0)
+    assert cfg.boot_s == 90.0
+    assert cfg.churn_prob > 0.0  # same interruption shape as aws_default
+    assert InstanceConfig.gpu_default().boot_s == 90.0
+
+
+# ---------------------------------------------------------------------------
+# pareto_frontier tie handling (regression): equal-coordinate reports are
+# mutually non-dominated — both must survive, under any input order
+# ---------------------------------------------------------------------------
+
+def test_pareto_frontier_keeps_equal_coordinate_ties():
+    a = CostReport("serverless", 5.0, 2.0, label="lambda-4400")
+    b = CostReport("instance", 5.0, 2.0, label="t2.large")
+    assert not dominates(a, b) and not dominates(b, a)
+    front = pareto_frontier([a, b])
+    assert a in front and b in front  # previously one was silently evicted
+
+
+def test_pareto_frontier_is_permutation_and_duplication_invariant():
+    import itertools
+
+    a = CostReport("serverless", 5.0, 2.0, label="x")
+    b = CostReport("instance", 5.0, 2.0, label="y")
+    fast = CostReport("serverless", 1.0, 9.0, label="fast")
+    dom = CostReport("instance", 6.0, 3.0, label="dominated")
+    pts = [a, b, fast, dom]
+    base = pareto_frontier(pts)
+    assert dom not in base and len(base) == 3
+    for perm in itertools.permutations(pts):
+        assert pareto_frontier(list(perm)) == base  # total-order sort key
+    # duplication keeps membership (each copy survives, none evicts another)
+    dup = pareto_frontier(pts + pts)
+    assert dup == [p for p in base for _ in (0, 1)]
 
 
 def test_trainer_cost_frontier_is_fresh_and_deterministic():

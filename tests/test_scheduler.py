@@ -1,0 +1,466 @@
+"""Heterogeneous fleets + auto-scheduler: property tests for the frontier
+math (no frontier point dominated, every non-frontier point dominated,
+permutation/duplication invariance), scheduler invariants (deadline/budget
+never violated, exhaustive-optimal picks, strict policies raise exactly
+when infeasible), single-backend fleet == PR 5 pure-backend accounting
+<= 1e-6, and the mixed-fleet (GPU + CPU + serverless in one epoch)
+same-seed trace-determinism rail.
+
+The randomized suites run on seeded numpy (always-on, reproducible); the
+hypothesis variants add shrinking search when hypothesis is installed.
+"""
+import numpy as np
+import pytest
+
+from repro.analysis.trace import TraceRecorder
+from repro.core.cost import (
+    CostReport,
+    dominates,
+    ec2_cost_per_second,
+    pareto_frontier,
+)
+from repro.core.events import InstanceConfig, RuntimeConfig
+from repro.core.scheduler import (
+    FleetExecutor,
+    FleetPlan,
+    PeerAssignment,
+    Scheduler,
+    available_schedulers,
+    evaluate_candidates,
+    get_scheduler,
+    standard_candidates,
+)
+from repro.core.serverless import ServerlessExecutor
+
+MODEL = int(531e6)
+BATCH = int(8e6)
+
+
+def _random_reports(rng, n, *, grid=True):
+    """Random CostReport sets; the coarse grid forces coordinate ties."""
+    out = []
+    for i in range(n):
+        if grid:
+            wall = float(rng.integers(1, 6))
+            cost = float(rng.integers(1, 6))
+        else:
+            wall = float(rng.uniform(0.1, 100.0))
+            cost = float(rng.uniform(1e-4, 1.0))
+        out.append(
+            CostReport(
+                backend=("serverless", "instance", "fleet")[int(rng.integers(3))],
+                wall_time_s=wall,
+                cost_usd=cost,
+                num_peers=int(rng.integers(1, 5)),
+                label=f"r{i}",
+            )
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Frontier invariants (property suite)
+# ---------------------------------------------------------------------------
+
+def _check_frontier_invariants(pts):
+    front = pareto_frontier(pts)
+    assert front, "a nonempty set always has a nonempty frontier"
+    # 1. no frontier point is dominated by ANY input point
+    for f in front:
+        assert not any(dominates(p, f) for p in pts)
+    # 2. every non-frontier point is dominated by some frontier point
+    for p in pts:
+        if p not in front:
+            assert any(dominates(f, p) for f in front)
+    # 3. permutation invariance (total-order sort key)
+    rng = np.random.default_rng(0)
+    for _ in range(3):
+        perm = [pts[j] for j in rng.permutation(len(pts))]
+        assert pareto_frontier(perm) == front
+    # 4. duplication invariance: membership unchanged, copies kept
+    dup = pareto_frontier(list(pts) + list(pts))
+    assert [p for p in dup if p in front] == dup
+    for f in front:
+        assert f in dup
+
+
+@pytest.mark.parametrize("grid", [True, False])
+def test_frontier_invariants_randomized(grid):
+    rng = np.random.default_rng(7 if grid else 8)
+    for trial in range(60):
+        pts = _random_reports(rng, int(rng.integers(1, 14)), grid=grid)
+        _check_frontier_invariants(pts)
+
+
+def test_frontier_invariants_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        coords=st.lists(
+            st.tuples(st.integers(1, 5), st.integers(1, 5)),
+            min_size=1,
+            max_size=12,
+        )
+    )
+    def prop(coords):
+        pts = [
+            CostReport("serverless", float(w), float(c), label=f"h{i}")
+            for i, (w, c) in enumerate(coords)
+        ]
+        _check_frontier_invariants(pts)
+
+    prop()
+
+
+def test_equal_coordinate_reports_are_mutually_nondominated():
+    a = CostReport("serverless", 3.0, 3.0, label="a")
+    b = CostReport("instance", 3.0, 3.0, label="b")
+    assert not dominates(a, b) and not dominates(b, a)
+    assert dominates(CostReport("x", 2.0, 3.0), a)  # faster, same cost
+    assert dominates(CostReport("x", 3.0, 2.0), a)  # same wall, cheaper
+    front = pareto_frontier([a, b])
+    assert len(front) == 2
+
+
+# ---------------------------------------------------------------------------
+# Scheduler invariants (property suite)
+# ---------------------------------------------------------------------------
+
+def _check_scheduler_invariants(reports, deadline, budget):
+    cheapest = get_scheduler("cheapest_under_deadline")
+    fastest = get_scheduler("fastest_under_budget")
+    walker = get_scheduler("pareto_walk")
+
+    dl_ok = [r for r in reports if deadline is None or r.wall_time_s <= deadline]
+    if dl_ok:
+        pick = reports[cheapest.choose(reports, deadline_s=deadline)]
+        assert deadline is None or pick.wall_time_s <= deadline  # never violated
+        assert pick.total_usd == min(r.total_usd for r in dl_ok)  # exhaustive
+    else:
+        with pytest.raises(ValueError, match="deadline"):
+            cheapest.choose(reports, deadline_s=deadline)
+
+    bg_ok = [r for r in reports if budget is None or r.total_usd <= budget]
+    if bg_ok:
+        pick = reports[fastest.choose(reports, budget_usd=budget)]
+        assert budget is None or pick.total_usd <= budget  # never violated
+        assert pick.wall_time_s == min(r.wall_time_s for r in bg_ok)
+    else:
+        with pytest.raises(ValueError, match="budget"):
+            fastest.choose(reports, budget_usd=budget)
+
+    # pareto_walk: best-effort — never raises, never leaves the frontier
+    pick = reports[walker.choose(reports, deadline_s=deadline, budget_usd=budget)]
+    front = pareto_frontier(reports)
+    assert any(
+        pick.wall_time_s == f.wall_time_s and pick.cost_usd == f.cost_usd
+        for f in front
+    )
+    if deadline is None and budget is None:
+        assert pick.cost_usd == min(f.cost_usd for f in front)
+
+
+def test_scheduler_invariants_randomized():
+    rng = np.random.default_rng(11)
+    for trial in range(80):
+        reports = _random_reports(rng, int(rng.integers(1, 10)), grid=True)
+        deadline = (
+            None if rng.random() < 0.25 else float(rng.uniform(0.0, 7.0))
+        )
+        budget = (
+            None if rng.random() < 0.25 else float(rng.uniform(0.0, 25.0))
+        )
+        _check_scheduler_invariants(reports, deadline, budget)
+
+
+def test_scheduler_invariants_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        coords=st.lists(
+            st.tuples(st.integers(1, 5), st.integers(1, 5), st.integers(1, 4)),
+            min_size=1,
+            max_size=10,
+        ),
+        deadline=st.one_of(st.none(), st.floats(0.0, 8.0)),
+        budget=st.one_of(st.none(), st.floats(0.0, 30.0)),
+    )
+    def prop(coords, deadline, budget):
+        reports = [
+            CostReport(
+                "serverless", float(w), float(c), num_peers=p, label=f"h{i}"
+            )
+            for i, (w, c, p) in enumerate(coords)
+        ]
+        _check_scheduler_invariants(reports, deadline, budget)
+
+    prop()
+
+
+def test_scheduler_registry_contract():
+    names = available_schedulers()
+    assert {"cheapest_under_deadline", "fastest_under_budget",
+            "pareto_walk"} <= set(names)
+    for n in names:
+        s = get_scheduler(n)
+        assert isinstance(s, Scheduler) and s.name == n
+    with pytest.raises(ValueError, match="registered schedulers"):
+        get_scheduler("gradient_descent_on_money")
+
+
+def test_scheduler_tie_break_is_deterministic():
+    # two equal-cost equal-wall candidates: the pick must be stable (first
+    # index), not dependent on dict/hash order
+    reports = [
+        CostReport("serverless", 2.0, 1.0, label="a"),
+        CostReport("instance", 2.0, 1.0, label="b"),
+    ]
+    s = get_scheduler("cheapest_under_deadline")
+    assert all(s.choose(reports, deadline_s=5.0) == 0 for _ in range(5))
+
+
+# ---------------------------------------------------------------------------
+# FleetPlan validation
+# ---------------------------------------------------------------------------
+
+def test_peer_assignment_validation():
+    with pytest.raises(ValueError, match="backend"):
+        PeerAssignment("tpu")
+    with pytest.raises(ValueError, match="known tiers"):
+        PeerAssignment("instance", instance="t9.mega")
+    with pytest.raises(ValueError, match="serverless knob"):
+        PeerAssignment("instance", instance="t2.large", memory_mb=1024)
+    with pytest.raises(ValueError, match="no VM tier"):
+        PeerAssignment("serverless", instance="t2.large")
+    with pytest.raises(ValueError, match="memory_mb"):
+        PeerAssignment("serverless", memory_mb=64)
+    assert PeerAssignment("instance", instance="g5.xlarge").is_gpu
+    assert not PeerAssignment("serverless").is_gpu
+
+
+def test_fleet_plan_shape():
+    with pytest.raises(ValueError, match="at least one"):
+        FleetPlan(())
+    plan = FleetPlan.pure("serverless", 3, memory_mb=4400)
+    assert plan.num_peers == 3 and plan.is_pure
+    mixed = FleetPlan(
+        (
+            PeerAssignment("instance", instance="p3.2xlarge"),
+            PeerAssignment("serverless"),
+        ),
+        name="m",
+    )
+    assert not mixed.is_pure
+    assert "gpu:p3.2xlarge" in mixed.describe()
+    assert len(standard_candidates(4)) >= 6
+
+
+# ---------------------------------------------------------------------------
+# Single-backend fleet == PR 5 pure-backend accounting (<= 1e-6)
+# ---------------------------------------------------------------------------
+
+def test_pure_serverless_fleet_matches_pr5_report():
+    times = [0.4] * 6
+    fx = FleetExecutor(runtime=RuntimeConfig(seed=0))
+    fr = fx.run_epoch(
+        FleetPlan.pure("serverless", 3),
+        [times] * 3,
+        model_bytes=MODEL,
+        batch_bytes=BATCH,
+    )
+    pure = (
+        ServerlessExecutor(runtime=RuntimeConfig(seed=0))
+        .simulate(times, model_bytes=MODEL, batch_bytes=BATCH)
+        .cost_report(num_peers=3)
+    )
+    cr = fr.cost_report()
+    assert cr.backend == "serverless"
+    assert abs(cr.wall_time_s - pure.wall_time_s) <= 1e-6
+    assert abs(cr.cost_usd - pure.cost_usd) <= 1e-6
+    assert abs(cr.total_usd - pure.total_usd) <= 1e-6
+    assert cr.lambda_memory_mb == pure.lambda_memory_mb
+
+
+def test_pure_instance_fleet_matches_pr5_report():
+    times = [0.7] * 5
+    fx = FleetExecutor(instance_config=InstanceConfig())
+    fr = fx.run_epoch(
+        FleetPlan.pure("instance", 4, instance="t2.xlarge"),
+        [times] * 4,
+        model_bytes=MODEL,
+        batch_bytes=BATCH,
+    )
+    pure = (
+        ServerlessExecutor(
+            backend="instance",
+            instance="t2.xlarge",
+            instance_config=InstanceConfig(),
+        )
+        .simulate_instance(
+            times, model_bytes=MODEL, batch_bytes=BATCH, reference_vcpus=1.0
+        )
+        .cost_report(num_peers=4)
+    )
+    cr = fr.cost_report()
+    assert cr.backend == "instance" and cr.instance == "t2.xlarge"
+    assert abs(cr.wall_time_s - pure.wall_time_s) <= 1e-6
+    assert abs(cr.cost_usd - pure.cost_usd) <= 1e-6
+    # identical peers: nobody waits at the barrier (float noise only)
+    assert all(r.idle_s <= 1e-9 for r in fr.per_peer)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-fleet accounting: wall = max over peers, cost = sum, idle billed
+# ---------------------------------------------------------------------------
+
+def test_mixed_fleet_wall_is_max_and_cost_is_sum():
+    heavy, light = [24.0, 24.0], [0.3] * 12
+    plan = FleetPlan(
+        (
+            PeerAssignment("instance", instance="p3.2xlarge"),
+            PeerAssignment("serverless"),
+        )
+    )
+    fx = FleetExecutor(instance_config=InstanceConfig())  # no boot: warm math
+    fr = fx.run_epoch(
+        plan, [heavy, light], model_bytes=MODEL, batch_bytes=BATCH
+    )
+    gpu_rep, sls_rep = fr.per_peer
+    assert fr.wall_time_s == pytest.approx(
+        max(gpu_rep.wall_time_s, sls_rep.wall_time_s)
+    )
+    assert fr.total_usd == pytest.approx(gpu_rep.cost_usd + sls_rep.cost_usd)
+    assert fr.cost_report().backend == "fleet"
+    # GPU ran 48 reference-seconds at 24x
+    assert gpu_rep.wall_time_s >= 2.0
+
+
+def test_instance_peer_bills_barrier_idle_to_fleet_wall():
+    # a fast CPU peer waits for a slow serverless peer: the VM's meter runs
+    plan = FleetPlan(
+        (
+            PeerAssignment("instance", instance="t2.xlarge"),
+            PeerAssignment("serverless"),
+        )
+    )
+    fx = FleetExecutor(instance_config=InstanceConfig())
+    fr = fx.run_epoch(
+        plan, [[0.1], [30.0]], model_bytes=MODEL, batch_bytes=BATCH
+    )
+    cpu_rep, sls_rep = fr.per_peer
+    assert fr.wall_time_s == pytest.approx(sls_rep.wall_time_s)
+    idle = fr.wall_time_s - (0.1 / 4.0)  # t2.xlarge runs 0.1 ref-s at 4 vCPU
+    assert cpu_rep.idle_s == pytest.approx(idle)
+    assert cpu_rep.cost_usd == pytest.approx(
+        ec2_cost_per_second("t2.xlarge") * fr.wall_time_s
+    )
+
+
+def test_fleet_rejects_mismatched_workload():
+    fx = FleetExecutor()
+    with pytest.raises(ValueError, match="per-peer batch lists"):
+        fx.run_epoch(
+            FleetPlan.pure("serverless", 3),
+            [[1.0]] * 2,
+            model_bytes=MODEL,
+            batch_bytes=BATCH,
+        )
+
+
+def test_evaluate_candidates_warm_amortizes_boot():
+    plan = FleetPlan.pure("instance", 2, instance="p3.2xlarge")
+    cold = evaluate_candidates(
+        [plan], [[1.0]] * 2, model_bytes=MODEL, batch_bytes=BATCH, warm=False
+    )[0]
+    warm = evaluate_candidates(
+        [plan], [[1.0]] * 2, model_bytes=MODEL, batch_bytes=BATCH, warm=True
+    )[0]
+    # first epoch pays the GPU boot; steady state does not
+    assert cold.wall_time_s > warm.wall_time_s
+    assert warm.wall_time_s == pytest.approx(1.0 / 24.0)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-fleet trace-determinism rail (PR 8): GPU + CPU + serverless in one
+# epoch, same seed => bit-identical digests — faults/churn ON
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "runtime,instance_cfg",
+    [
+        (RuntimeConfig(seed=3), None),  # ideal fleet (GPU boot preset)
+        (
+            RuntimeConfig.aws_default(),  # cold starts, stragglers, faults
+            InstanceConfig(
+                boot_s=5.0, churn_prob=0.3, churn_downtime_s=2.0, seed=3
+            ),
+        ),
+    ],
+    ids=["ideal", "faulty"],
+)
+def test_mixed_fleet_same_seed_digest_stability(runtime, instance_cfg):
+    plan = FleetPlan(
+        (
+            PeerAssignment("instance", instance="p3.2xlarge"),
+            PeerAssignment("instance", instance="t2.large"),
+            PeerAssignment("serverless"),
+            PeerAssignment("serverless", memory_mb=4400),
+        ),
+        name="gpu+cpu+sls",
+    )
+    workload = [[6.0, 6.0], [1.0] * 4, [0.5] * 8, [0.5] * 8]
+
+    def one_run():
+        tr = TraceRecorder()
+        fx = FleetExecutor(
+            runtime=runtime, instance_config=instance_cfg, tracer=tr
+        )
+        outs = [
+            fx.run_epoch(plan, workload, model_bytes=MODEL, batch_bytes=BATCH)
+            for _ in range(2)
+        ]
+        return tr.digest(), [o.wall_time_s for o in outs], [
+            o.total_usd for o in outs
+        ]
+
+    d1, walls1, usd1 = one_run()
+    d2, walls2, usd2 = one_run()
+    assert d1 == d2  # bit-identical event traces
+    assert walls1 == walls2 and usd1 == usd2
+
+
+# ---------------------------------------------------------------------------
+# Trainer surface: P2PTrainer(scheduler=...) + schedule_epoch
+# ---------------------------------------------------------------------------
+
+def test_trainer_schedule_epoch_picks_under_constraints():
+    from repro.configs import get_config, reduced
+    from repro.core.p2p import Topology
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim import sgd
+    from repro.optim.schedules import warmup_cosine
+    from repro.train import P2PTrainer
+
+    tr = P2PTrainer(
+        reduced(get_config("qwen2.5-3b"), vocab_size=64),
+        sgd(), Topology(peer_axes=()), make_host_mesh(1, 1),
+        warmup_cosine(1e-3, 1, 10),
+        scheduler="cheapest_under_deadline",
+    )
+    workload = [[8.0], [8.0], [0.2] * 8, [0.2] * 8]
+    out = tr.schedule_epoch(workload, deadline_s=120.0)
+    assert out["plan"].num_peers == 4
+    assert out["report"].wall_time_s <= 120.0
+    assert len(out["candidates"]) >= 6
+    # no scheduler configured -> actionable error
+    tr2 = P2PTrainer(
+        reduced(get_config("qwen2.5-3b"), vocab_size=64),
+        sgd(), Topology(peer_axes=()), make_host_mesh(1, 1),
+        warmup_cosine(1e-3, 1, 10),
+    )
+    with pytest.raises(ValueError, match="scheduler"):
+        tr2.schedule_epoch(workload)
